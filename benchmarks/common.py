@@ -1,0 +1,56 @@
+"""Shared benchmark utilities: timing, throughput, result records.
+
+Throughput unit is GPts/s (grid points updated per second) — the paper's
+fig. 7/8/10 metric.  The CPU container measures XLA-CPU absolute numbers;
+the *relative* effects (fusion, CSE, decomposition overhead, backend
+choice) are the reproducible signal, and the TPU roofline model
+(launch/roofline.py) provides the target-hardware projection.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def time_step(fn: Callable, args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-clock seconds per call (blocked until ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def gpts(shape: tuple, seconds: float, timesteps: int = 1) -> float:
+    pts = float(np.prod(shape)) * timesteps
+    return pts / seconds / 1e9
+
+
+def save_record(name: str, record: dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def table(title: str, rows: list, headers: list) -> str:
+    widths = [
+        max(len(str(h)), max((len(str(r[i])) for r in rows), default=0))
+        for i, h in enumerate(headers)
+    ]
+    out = [title, "-" * len(title)]
+    out.append("  ".join(str(h).ljust(w) for h, w in zip(headers, widths)))
+    for r in rows:
+        out.append("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)

@@ -1,0 +1,55 @@
+"""Paper fig. 7a analogue: heat-diffusion (Jacobi-like) stencil
+throughput, 2D and 3D, space orders 2/4/8.
+
+Devito DSL input → shared stencil stack → XLA-CPU executable; the paper's
+ARCHER2 run uses 16384²/1024³ grids — the CPU container scales those down
+but keeps the sweep structure (dims × SDO) and reports GPts/s.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import gpts, save_record, table, time_step
+from repro.core.program import CompileOptions, time_loop
+from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
+
+CASES = [
+    # (ndim, shape, timesteps)
+    (2, (2048, 2048), 16),
+    (3, (192, 192, 192), 8),
+]
+ORDERS = (2, 4, 8)
+
+
+def run(fast: bool = False) -> dict:
+    cases = CASES if not fast else [(2, (256, 256), 4)]
+    rows, record = [], {}
+    for ndim, shape, steps in cases:
+        for so in ORDERS if not fast else (2,):
+            g = Grid(shape=shape, extent=tuple(1.0 for _ in shape))
+            u = TimeFunction(name="u", grid=g, space_order=so)
+            op = Operator(Eq(u.dt, 0.5 * u.laplace), dt=1e-7, boundary="zero")
+            step = op.compile_step(options=CompileOptions())
+            u0 = jnp.asarray(
+                np.random.default_rng(0).standard_normal(shape), jnp.float32
+            )
+
+            import jax
+
+            many = jax.jit(
+                lambda u0, step=step, steps=steps: time_loop(step, (u0,), steps)
+            )
+            sec = time_step(many, (u0,), iters=3, warmup=1)
+            tp = gpts(shape, sec, steps)
+            key = f"heat{ndim}d_so{so}"
+            record[key] = {"shape": shape, "steps": steps, "sec": sec, "gpts": tp}
+            rows.append((f"{ndim}D", f"so{so}", "x".join(map(str, shape)), f"{tp:.3f}"))
+    print(table("fig7a: heat diffusion throughput (GPts/s, XLA-CPU)", rows,
+                ["dims", "SDO", "grid", "GPts/s"]))
+    save_record("fig7_heat", record)
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Benchmark driver: one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+fig7a/b  heat / acoustic-wave throughput sweeps (Devito-like frontend)
+fig8     strong-scaling model (halo bytes + roofline terms vs ranks)
+fig10    PW + tracer advection (PSyclone-like frontend, fusion counts)
+table1   backend comparison (jnp vs pallas; raw vs optimized pipeline)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="reduced sizes (CI)")
+    ap.add_argument("--only", default=None, help="comma-list of benches")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        backend_compare,
+        fig7_heat,
+        fig7_wave,
+        fig8_scaling,
+        fig10_advection,
+    )
+
+    benches = {
+        "fig7_heat": fig7_heat.run,
+        "fig7_wave": fig7_wave.run,
+        "fig8_scaling": fig8_scaling.run,
+        "fig10_advection": fig10_advection.run,
+        "backend_compare": backend_compare.run,
+    }
+    wanted = args.only.split(",") if args.only else list(benches)
+    failures = 0
+    for name in wanted:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            benches[name](fast=args.fast)
+            print(f"[{name} done in {time.time()-t0:.1f}s]")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            import traceback
+
+            traceback.print_exc()
+            print(f"[{name} FAILED: {e}]")
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    LM_SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    get_shape,
+    reduced_config,
+)
+from repro.configs.registry import ARCHS, get_config  # noqa: F401

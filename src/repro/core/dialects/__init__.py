@@ -1,0 +1,1 @@
+from repro.core.dialects import comm, dmp, stencil  # noqa: F401

@@ -1,0 +1,178 @@
+"""The ``comm`` dialect — the paper's ``mpi`` dialect adapted to TPU/JAX.
+
+The paper lowers ``dmp.swap`` to MPI_Isend/Irecv/Waitall.  TPU pods have no
+MPI; the ICI-native primitive for a cartesian shift is
+``jax.lax.ppermute`` inside ``shard_map``.  We keep the paper's
+*non-blocking* structure at the IR level so the overlap pass (beyond-paper,
+the paper's explicit future work) has something to schedule around:
+
+- ``comm.exchange_start`` extracts the send rectangle and issues the
+  permute; its result is the *in-flight* halo patch (the analogue of an
+  MPI request + recv buffer).
+- ``comm.wait`` consumes in-flight patches and the local array and
+  materializes the updated array (the analogue of MPI_Waitall + unpack).
+
+Anything scheduled between start and wait has no data dependence on the
+exchange, so XLA's latency-hiding scheduler can overlap the collective —
+the dataflow counterpart of the MPI request model.
+
+The dialect also carries the collective subset the paper's mpi dialect
+exposes (allreduce, broadcast) for use by drivers (e.g. residual norms).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.core.ir import Attribute, Operation, SSAValue, TypeAttribute, VerificationError
+from repro.core.dialects.stencil import Bounds, TempType
+
+
+@dataclass(frozen=True)
+class InFlightType(TypeAttribute):
+    """The type of an in-flight halo patch (MPI request + buffer analogue)."""
+
+    bounds: Bounds  # rectangle being received (local coordinates)
+    element_type: object
+
+    def __hash__(self) -> int:
+        return hash((InFlightType, self.bounds, self.element_type))
+
+
+class ExchangeStartOp(Operation):
+    """``%patch = comm.exchange_start %t {axis_name, shift, send/recv rects}``
+
+    Sends ``send`` rectangle of ``%t`` to the rank ``shift`` steps along mesh
+    axis ``axis_name``; the result is the rectangle received from the
+    opposite neighbour, destined for ``recv``.  ``shift`` may be a tuple of
+    (axis_name, step) pairs for diagonal exchanges (beyond-paper).
+    """
+
+    name = "comm.exchange_start"
+
+    def __init__(
+        self,
+        temp: SSAValue,
+        axis_shifts: Sequence[tuple],  # ((axis_name, step), ...)
+        send_offset: tuple,
+        recv_offset: tuple,
+        size: tuple,
+    ) -> None:
+        assert isinstance(temp.type, TempType)
+        from repro.core.ir import IntAttr, StringAttr, TupleAttr
+
+        rect = Bounds(tuple(recv_offset), tuple(o + s for o, s in zip(recv_offset, size)))
+        super().__init__(
+            operands=[temp],
+            result_types=[InFlightType(rect, temp.type.element_type)],
+            attributes={
+                "axis_shifts": TupleAttr(
+                    tuple(
+                        TupleAttr((StringAttr(a), IntAttr(int(s))))
+                        for a, s in axis_shifts
+                    )
+                ),
+                "send_offset": TupleAttr(tuple(IntAttr(int(o)) for o in send_offset)),
+                "recv_offset": TupleAttr(tuple(IntAttr(int(o)) for o in recv_offset)),
+                "size": TupleAttr(tuple(IntAttr(int(s)) for s in size)),
+            },
+        )
+
+    @property
+    def temp(self) -> SSAValue:
+        return self.operands[0]
+
+    @property
+    def axis_shifts(self) -> tuple:
+        return tuple(
+            (pair[0].value, pair[1].value) for pair in self.attributes["axis_shifts"]
+        )
+
+    @property
+    def send_offset(self) -> tuple:
+        return tuple(a.value for a in self.attributes["send_offset"])
+
+    @property
+    def recv_offset(self) -> tuple:
+        return tuple(a.value for a in self.attributes["recv_offset"])
+
+    @property
+    def size(self) -> tuple:
+        return tuple(a.value for a in self.attributes["size"])
+
+
+class WaitOp(Operation):
+    """``%out = comm.wait %t, %patch…`` — insert received patches into the
+    array (MPI_Waitall + halo unpack)."""
+
+    name = "comm.wait"
+
+    def __init__(self, temp: SSAValue, patches: Sequence[SSAValue]) -> None:
+        assert isinstance(temp.type, TempType)
+        for p in patches:
+            assert isinstance(p.type, InFlightType)
+        super().__init__(
+            operands=[temp, *patches], result_types=[temp.type]
+        )
+
+    @property
+    def temp(self) -> SSAValue:
+        return self.operands[0]
+
+    @property
+    def patches(self) -> tuple:
+        return tuple(self.operands[1:])
+
+    def verify_(self) -> None:
+        bounds: Bounds = self.temp.type.bounds
+        for p in self.patches:
+            if not bounds.contains(p.type.bounds):
+                raise VerificationError(
+                    f"comm.wait patch {p.type.bounds} outside array bounds {bounds}"
+                )
+
+
+class AllReduceOp(Operation):
+    """``%r = comm.allreduce %v {axes, op}`` — MPI_Allreduce analogue
+    (lowers to jax.lax.psum/pmax over named mesh axes)."""
+
+    name = "comm.allreduce"
+
+    def __init__(self, value: SSAValue, axis_names: Sequence[str], op: str = "sum") -> None:
+        from repro.core.ir import StringAttr, TupleAttr
+
+        assert op in ("sum", "max", "min")
+        super().__init__(
+            operands=[value],
+            result_types=[value.type],
+            attributes={
+                "axes": TupleAttr(tuple(StringAttr(a) for a in axis_names)),
+                "op": StringAttr(op),
+            },
+        )
+
+    @property
+    def axes(self) -> tuple:
+        return tuple(a.value for a in self.attributes["axes"])
+
+    @property
+    def op(self) -> str:
+        return self.attributes["op"].value  # type: ignore[attr-defined]
+
+
+class BroadcastOp(Operation):
+    """``%r = comm.broadcast %v {root, axes}`` — MPI_Bcast analogue."""
+
+    name = "comm.broadcast"
+
+    def __init__(self, value: SSAValue, axis_names: Sequence[str], root: int = 0) -> None:
+        from repro.core.ir import IntAttr, StringAttr, TupleAttr
+
+        super().__init__(
+            operands=[value],
+            result_types=[value.type],
+            attributes={
+                "axes": TupleAttr(tuple(StringAttr(a) for a in axis_names)),
+                "root": IntAttr(root),
+            },
+        )

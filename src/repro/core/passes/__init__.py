@@ -1,0 +1,39 @@
+"""Pass infrastructure: a pass is a callable ``FuncOp -> FuncOp`` (pure) or
+``FuncOp -> None`` (in-place).  ``PassManager`` chains them with verification
+between stages, mirroring mlir-opt pipelines."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Sequence
+
+from repro.core import ir
+
+
+class PassManager:
+    def __init__(self, passes: Sequence[Callable], verify: bool = True) -> None:
+        self.passes = list(passes)
+        self.verify = verify
+        self.timings: list[tuple[str, float]] = []
+
+    def run(self, func: ir.FuncOp) -> ir.FuncOp:
+        for p in self.passes:
+            t0 = time.perf_counter()
+            out = p(func)
+            if out is not None:
+                func = out
+            self.timings.append((getattr(p, "__name__", repr(p)), time.perf_counter() - t0))
+            if self.verify:
+                ir.verify_module(func)
+        return func
+
+
+from repro.core.passes.halo import infer_apply_halo, infer_field_halos  # noqa: E402,F401
+from repro.core.passes.decompose import (  # noqa: E402,F401
+    SlicingStrategy,
+    decompose_stencil,
+)
+from repro.core.passes.swap_elim import eliminate_redundant_swaps  # noqa: E402,F401
+from repro.core.passes.fusion import fuse_applies  # noqa: E402,F401
+from repro.core.passes.cse import cse_apply_bodies, dce  # noqa: E402,F401
+from repro.core.passes.overlap import enable_comm_compute_overlap  # noqa: E402,F401
+from repro.core.passes.diagonal import use_diagonal_exchanges  # noqa: E402,F401

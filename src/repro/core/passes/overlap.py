@@ -1,0 +1,48 @@
+"""Communication/computation overlap — **beyond-paper** (sec. 8 lists it as
+future work: "Further work includes ... DMP/MPI optimizations, such as
+diagonal communications ... and communication/computation overlap").
+
+The rewrite is declarative: swaps whose results feed exactly one apply are
+tagged ``overlap = true``; the JAX lowering then splits that apply into an
+*interior* application (points whose accesses never touch the halo, i.e.
+the core shrunk by the halo width) computed **between** ``exchange_start``
+and ``wait``, and a *boundary frame* computed after the halos land.  With
+the XLA latency-hiding scheduler, the ppermute(s) then ride under the
+interior compute — the dataflow analogue of MPI_Isend/Irecv + interior
+kernel + MPI_Waitall + boundary kernel.
+"""
+from __future__ import annotations
+
+from repro.core import ir
+from repro.core.ir import IntAttr
+from repro.core.dialects import dmp, stencil
+
+
+def enable_comm_compute_overlap(func: ir.FuncOp) -> int:
+    """Tag eligible swaps; returns how many were tagged."""
+    n = 0
+    for op in func.body.ops:
+        if not isinstance(op, dmp.SwapOp):
+            continue
+        if not op.exchanges:
+            continue
+        consumers = {u.operation for u in op.results[0].uses}
+        if len(consumers) == 1 and all(
+            isinstance(c, stencil.ApplyOp) for c in consumers
+        ):
+            apply = next(iter(consumers))
+            lo, hi = op.halo_widths()
+            core = apply.result_bounds
+            # interior must be non-empty in every dim
+            if all(
+                (u - h) - (l + lw) > 0
+                for l, u, lw, h in zip(core.lb, core.ub, lo, hi)
+            ):
+                op.attributes["overlap"] = IntAttr(1)
+                n += 1
+    return n
+
+
+def overlap_enabled(swap: dmp.SwapOp) -> bool:
+    a = swap.attributes.get("overlap")
+    return a is not None and a.value == 1  # type: ignore[union-attr]

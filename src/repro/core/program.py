@@ -1,0 +1,229 @@
+"""User-facing compilation API — the shared entry point all three
+frontends lower into (paper fig. 1b).
+
+``StencilComputation`` wraps a global-domain stencil function and compiles
+it for a device mesh with a decomposition strategy:
+
+    comp = StencilComputation(func, boundary="periodic")
+    step = comp.compile(mesh=mesh, strategy=make_strategy_2d((4, 2)))
+    u1 = step(u0)                      # global arrays in, global arrays out
+
+The pipeline is the paper's: [fusion + cse] → decompose (dmp.swap
+insertion) → redundant-swap elimination → [overlap / diagonal rewrites] →
+lowering to shard_map + ppermute + (jnp | pallas) compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import ir
+from repro.core.dialects import stencil
+from repro.core.lowering import StencilInterpreter, lower_dmp_to_comm
+from repro.core.passes import (
+    PassManager,
+    cse_apply_bodies,
+    dce,
+    decompose_stencil,
+    eliminate_redundant_swaps,
+    enable_comm_compute_overlap,
+    fuse_applies,
+    use_diagonal_exchanges,
+)
+from repro.core.passes.decompose import SlicingStrategy
+
+
+@dataclasses.dataclass
+class CompileOptions:
+    backend: str = "jnp"  # "jnp" | "pallas"
+    fuse: bool = True
+    cse: bool = True
+    overlap: bool = False  # beyond-paper: comm/compute overlap
+    diagonal: bool = False  # beyond-paper: concurrent corner exchanges
+    comm_dialect: bool = False  # lower dmp→comm explicitly (paper fig. 4)
+    pallas_interpret: bool = True  # CPU container: interpret kernels
+    pallas_tile: Optional[tuple] = None
+    donate: bool = True
+
+
+def trivial_strategy(rank: int) -> SlicingStrategy:
+    names = ("x", "y", "z", "w")[:rank]
+    return SlicingStrategy((1,) * rank, names, tuple(range(rank)))
+
+
+class StencilComputation:
+    def __init__(self, func: ir.FuncOp, boundary: str = "zero") -> None:
+        ir.verify_module(func)
+        self.func = func
+        self.boundary = boundary
+        self.field_args = [
+            a for a in func.body.args if isinstance(a.type, stencil.FieldType)
+        ]
+        self.last_local: Optional[ir.FuncOp] = None  # for inspection/tests
+
+    # ------------------------------------------------------------------
+    def prepare_local(
+        self,
+        strategy: Optional[SlicingStrategy] = None,
+        options: Optional[CompileOptions] = None,
+    ) -> ir.FuncOp:
+        """Run the shared pass pipeline; returns the rank-local function."""
+        opts = options or CompileOptions()
+        rank = self.field_args[0].type.bounds.rank if self.field_args else 1
+        strategy = strategy or trivial_strategy(rank)
+
+        work = _clone_func(self.func)
+        if opts.fuse:
+            fuse_applies(work)
+        if opts.cse:
+            cse_apply_bodies(work)
+            dce(work)
+        local = decompose_stencil(work, strategy, boundary=self.boundary)
+        eliminate_redundant_swaps(local)
+        if opts.diagonal:
+            use_diagonal_exchanges(local)
+        if opts.overlap:
+            enable_comm_compute_overlap(local)
+        if opts.comm_dialect:
+            local = lower_dmp_to_comm(local)
+        ir.verify_module(local)
+        self.last_local = local
+        return local
+
+    # ------------------------------------------------------------------
+    def compile(
+        self,
+        mesh: Optional[Mesh] = None,
+        strategy: Optional[SlicingStrategy] = None,
+        options: Optional[CompileOptions] = None,
+        jit: bool = True,
+    ) -> Callable:
+        """Compile to a callable over *global* arrays."""
+        opts = options or CompileOptions()
+        rank = self.field_args[0].type.bounds.rank if self.field_args else 1
+        strategy = strategy or trivial_strategy(rank)
+        local = self.prepare_local(strategy, opts)
+
+        distributed = mesh is not None and any(s > 1 for s in strategy.grid_shape)
+        axis_sizes = (
+            {name: mesh.shape[name] for name in mesh.axis_names} if mesh else {}
+        )
+        interp = StencilInterpreter(
+            local,
+            axis_sizes=axis_sizes,
+            distributed=distributed,
+            backend=opts.backend,
+            pallas_interpret=opts.pallas_interpret,
+            pallas_tile=opts.pallas_tile,
+        )
+        if not distributed:
+            fn = interp
+            if jit:
+                fn = jax.jit(interp)
+            return fn
+
+        specs = self.partition_specs(strategy)
+        out_specs = tuple(
+            specs[self.field_args.index(f)] for f in _stored_fields(self.func, self.field_args)
+        )
+        sharded = jax.shard_map(
+            interp,
+            mesh=mesh,
+            in_specs=tuple(specs),
+            out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+            check_vma=False,  # pallas_call outputs carry no vma info
+        )
+        if jit:
+            donate = tuple(range(len(specs))) if opts.donate else ()
+            sharded = jax.jit(sharded)
+        return sharded
+
+    # ------------------------------------------------------------------
+    def partition_specs(self, strategy: SlicingStrategy) -> list:
+        """PartitionSpec per field argument, from the decomposition map."""
+        specs = []
+        for f in self.field_args:
+            rank = f.type.bounds.rank
+            entries: list = [None] * rank
+            for gax, d in enumerate(strategy.dims):
+                if d < rank and strategy.grid_shape[gax] > 1:
+                    entries[d] = strategy.axis_names[gax]
+            specs.append(P(*entries))
+        return specs
+
+    # ------------------------------------------------------------------
+    def lower(
+        self,
+        mesh: Mesh,
+        strategy: SlicingStrategy,
+        options: Optional[CompileOptions] = None,
+        dtype=jnp.float32,
+    ):
+        """AOT-lower for the dry-run: ShapeDtypeStruct inputs, no allocation."""
+        opts = options or CompileOptions()
+        fn = self.compile(mesh, strategy, opts, jit=False)
+        specs = self.partition_specs(strategy)
+        args = [
+            jax.ShapeDtypeStruct(
+                f.type.bounds.shape,
+                dtype,
+                sharding=NamedSharding(mesh, spec),
+            )
+            for f, spec in zip(self.field_args, specs)
+        ]
+        return jax.jit(fn).lower(*args)
+
+    # ------------------------------------------------------------------
+    def global_zeros(self, dtype=jnp.float32) -> list:
+        return [jnp.zeros(f.type.bounds.shape, dtype) for f in self.field_args]
+
+
+def _stored_fields(func: ir.FuncOp, field_args: Sequence[ir.SSAValue]) -> list:
+    out = []
+    for op in func.body.ops:
+        if isinstance(op, stencil.StoreOp) and op.field not in out:
+            out.append(op.field)
+    return out
+
+
+def _clone_func(func: ir.FuncOp) -> ir.FuncOp:
+    new = ir.FuncOp(func.sym_name, [a.type for a in func.body.args])
+    vmap: dict[ir.SSAValue, ir.SSAValue] = {}
+    for oa, na in zip(func.body.args, new.body.args):
+        vmap[oa] = na
+    for op in func.body.ops:
+        new.body.add_op(op.clone_into(vmap))
+    return new
+
+
+# --------------------------------------------------------------------------
+# Time-loop driver (paper benchmarks iterate stencils over timesteps)
+# --------------------------------------------------------------------------
+
+
+def time_loop(
+    step: Callable,
+    state: Sequence[Any],
+    n_steps: int,
+    unroll: int = 1,
+) -> tuple:
+    """Iterate ``step`` with time-buffer rotation.
+
+    ``state`` is ordered oldest→newest; each call consumes the full state
+    and produces the newest buffer(s), which rotate in:
+    ``state' = state[k:] + outs``.  Runs under ``lax.fori_loop`` so the
+    whole simulation is one XLA computation.
+    """
+    state = tuple(state)
+
+    def body(_, s):
+        outs = step(*s)
+        outs = outs if isinstance(outs, tuple) else (outs,)
+        return tuple(s[len(outs):]) + outs
+
+    return jax.lax.fori_loop(0, n_steps, body, state, unroll=unroll)

@@ -1,0 +1,9 @@
+"""Three DSL frontends sharing one compilation stack (paper fig. 1b).
+
+- ``devito_like``   — symbolic finite differences (Grid/TimeFunction/Eq);
+- ``psyclone_like`` — loop-nest kernels with *stencil recognition*;
+- ``oec_like``      — direct stencil-dialect construction.
+
+All three emit the same ``stencil`` IR and compile through
+``repro.core.program.StencilComputation``.
+"""

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Independent implementations (no shared code with the kernels) used by the
+allclose test sweeps.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def star_stencil_ref(x, coeffs: Dict[Tuple[int, ...], float], halo: Tuple[int, ...]):
+    """Weighted sum of shifted reads.
+
+    ``x`` is halo-inclusive; the output is the core (x minus ``halo`` on
+    both sides per dim).  Out-of-core values come from the halo content —
+    boundary semantics live in whoever filled the halo.
+    """
+    rank = x.ndim
+    core = tuple(s - 2 * h for s, h in zip(x.shape, halo))
+    out = jnp.zeros(core, x.dtype)
+    for off, c in coeffs.items():
+        idx = tuple(
+            slice(h + o, h + o + n) for h, o, n in zip(halo, off, core)
+        )
+        out = out + jnp.asarray(c, x.dtype) * x[idx]
+    return out
+
+
+def heat_step_ref(u, alpha: float, order: int, halo: int):
+    """u_core + alpha * laplacian(u) — Jacobi-like heat-diffusion update."""
+    from repro.core.fd import laplacian_star
+
+    rank = u.ndim
+    star = laplacian_star(rank, order)
+    lap = star_stencil_ref(u, star, (halo,) * rank)
+    core = tuple(slice(halo, s - halo) for s in u.shape)
+    return u[core] + jnp.asarray(alpha, u.dtype) * lap
+
+
+def wave_step_ref(u_t, u_tm1, c2dt2: float, order: int, halo: int):
+    """2nd-order-in-time acoustic update:
+    u_{t+1} = 2 u_t - u_{t-1} + c²dt² ∇²u_t."""
+    from repro.core.fd import laplacian_star
+
+    rank = u_t.ndim
+    star = laplacian_star(rank, order)
+    lap = star_stencil_ref(u_t, star, (halo,) * rank)
+    core = tuple(slice(halo, s - halo) for s in u_t.shape)
+    return (
+        2.0 * u_t[core]
+        - u_tm1[core]
+        + jnp.asarray(c2dt2, u_t.dtype) * lap
+    )
+
+
+def sliding_window_attention_ref(q, k, v, window: int, causal: bool = True):
+    """O(S·W) oracle via explicit masking of full attention (small shapes).
+
+    q,k,v: [heads, seq, dim] (kv may have fewer heads — GQA broadcast).
+    Token i attends to [i-window+1, i] (causal sliding window).
+    """
+    hq, s, d = q.shape
+    hk = k.shape[0]
+    rep = hq // hk
+    k = jnp.repeat(k, rep, axis=0)
+    v = jnp.repeat(v, rep, axis=0)
+    scores = jnp.einsum("hsd,htd->hst", q, k) / np.sqrt(d)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = (j > i) if causal else jnp.zeros((s, s), bool)
+    mask = mask | (j <= i - window)
+    scores = jnp.where(mask[None], -jnp.inf, scores)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hst,htd->hsd", p, v)
+
+
+import jax  # noqa: E402  (used by sliding_window_attention_ref)

@@ -1,0 +1,273 @@
+"""Step builders + input specs for every (arch × shape) cell.
+
+``input_specs(cfg, shape, mesh, rules)`` returns ShapeDtypeStruct
+stand-ins for every model input (weak-type-correct, sharded, no device
+allocation); ``build_step`` returns the function the dry-run lowers with
+its in/out sharding trees.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import param_specs as pspecs
+from repro.dist.sharding import ShardingRules, _valid_spec, default_rules, use_mesh
+from repro.models import lm
+from repro.train import optimizer as opt_mod
+from repro.train.train_step import TrainOptions, init_train_state, make_train_step
+
+
+import os
+
+# Serving weight residency (§Perf hillclimb A): deployments keep bf16
+# weights resident — halves the per-step parameter read, the dominant
+# memory term at decode.  Default keeps the training dtype (f32 master)
+# so the baseline roofline table is paper-faithful; set
+# REPRO_SERVE_PARAMS_DTYPE=bfloat16 for the optimized variant.
+SERVE_PARAMS_DTYPE = os.environ.get("REPRO_SERVE_PARAMS_DTYPE", "float32")
+
+
+def _serving_param_shapes(params_shapes):
+    if SERVE_PARAMS_DTYPE != "bfloat16":
+        return params_shapes
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32 else s,
+        params_shapes,
+    )
+
+
+def _batch_axes(rules: ShardingRules):
+    return rules.physical("batch")
+
+
+def _ax_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+# --------------------------------------------------------------------------
+# cache sharding policy
+# --------------------------------------------------------------------------
+
+
+def kv_cache_spec(shape: tuple, mesh: Mesh, rules: ShardingRules) -> P:
+    """[cells, B, T, KH, HD] cache sharding.
+
+    Policy (DESIGN.md §6): shard batch over the batch axes when it
+    divides; shard KV heads over "model" when they divide, else shard the
+    *sequence* dim over "model" (domain decomposition of the KV domain —
+    decode softmax/PV reductions become small all-reduces).  Tiny-batch
+    long-context (long_500k) shards the sequence over everything
+    available.
+    """
+    from repro.dist.sharding import kv_cache_layout
+
+    cells, B, T, KH, HD = shape
+    batch_ax = _batch_axes(rules)
+    layout = kv_cache_layout(B, T, KH, mesh, rules)
+    if layout == "heads":
+        return P(None, batch_ax, None, "model", None)
+    if layout == "seq":
+        return P(None, batch_ax, "model", None, None)
+    if layout == "batch":
+        return P(None, batch_ax, None, None, None)
+    if layout == "seq_all":
+        seq_axes = tuple(
+            a for a in (batch_ax if isinstance(batch_ax, tuple) else (batch_ax,))
+            if a
+        ) + ("model",)
+        return P(None, None, seq_axes, None, None)
+    return P()
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shapes, mesh: Mesh, rules: ShardingRules):
+    batch_ax = _batch_axes(rules)
+
+    def one(path, leaf):
+        names = pspecs._path_names(path)
+        last = names[-1]
+        if last in ("k", "v", "ck", "cv"):
+            return kv_cache_spec(tuple(leaf.shape), mesh, rules)
+        # ssm/xlstm states: [cells, B, ...] — batch when divisible
+        entries = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 2:
+            entries[1] = batch_ax
+        if last == "conv" and len(leaf.shape) == 4:
+            entries[3] = "model"  # d_inner
+        return _valid_spec(mesh, P(*entries), tuple(leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+# --------------------------------------------------------------------------
+# input specs
+# --------------------------------------------------------------------------
+
+
+def input_specs(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    rules: Optional[ShardingRules] = None,
+) -> dict:
+    """ShapeDtypeStruct stand-ins for the step inputs of this cell."""
+    rules = rules or default_rules(multi_pod="pod" in mesh.axis_names)
+    batch_ax = _batch_axes(rules)
+    B, S = shape.global_batch, shape.seq_len
+
+    def sds(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(
+            shp, dtype, sharding=NamedSharding(mesh, _valid_spec(mesh, spec, shp))
+        )
+
+    if shape.kind in ("train", "prefill"):
+        n_text = S - (cfg.num_modality_tokens if cfg.modality == "vision" else 0)
+        batch = {"tokens": sds((B, n_text), jnp.int32, P(batch_ax, None))}
+        if cfg.modality == "vision":
+            batch["modality"] = sds(
+                (B, cfg.num_modality_tokens, cfg.modality_dim),
+                jnp.float32,
+                P(batch_ax, None, None),
+            )
+        elif cfg.modality == "audio":
+            batch["modality"] = sds(
+                (B, S, cfg.modality_dim), jnp.float32, P(batch_ax, None, None)
+            )
+        return batch
+
+    # decode: one token against a seq_len cache
+    cache_shapes = jax.eval_shape(
+        lambda: lm.init_cache(
+            cfg, B, S, memory_len=S if cfg.is_encoder_decoder else 0
+        )
+    )
+    cspecs = cache_pspecs(cfg, cache_shapes, mesh, rules)
+    cache = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)
+        ),
+        cache_shapes,
+        cspecs,
+    )
+    return {
+        "token": sds((B,), jnp.int32, P(batch_ax)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache,
+    }
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               rules: Optional[ShardingRules] = None,
+               train_options: Optional[TrainOptions] = None):
+    """Returns (fn, example_args, in_shardings, out_shardings)."""
+    rules = rules or default_rules(multi_pod="pod" in mesh.axis_names)
+    specs = input_specs(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        opt_cfg = opt_mod.OptimizerConfig()
+        options = train_options or TrainOptions(
+            q_chunk=min(1024, shape.seq_len)
+        )
+        step = make_train_step(cfg, opt_cfg, options)
+
+        def wrapped(state, batch):
+            with use_mesh(mesh, rules):
+                return step(state, batch)
+
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(0), cfg)
+        )
+        st_specs = pspecs.state_pspecs(state_shapes, rules, mesh)
+        state_in = jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)
+            ),
+            state_shapes,
+            st_specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+        in_shardings = (
+            jax.tree.map(lambda sp: NamedSharding(mesh, sp), st_specs),
+            jax.tree.map(lambda s: s.sharding, specs),
+        )
+        out_shardings = (
+            jax.tree.map(lambda sp: NamedSharding(mesh, sp), st_specs),
+            None,
+        )
+        return wrapped, (state_in, specs), in_shardings, out_shardings
+
+    if shape.kind == "prefill":
+
+        def prefill(params, batch):
+            with use_mesh(mesh, rules):
+                return lm.forward_prefill(
+                    params, cfg, batch["tokens"], batch.get("modality"),
+                    q_chunk=min(1024, shape.seq_len),
+                )
+
+        params_shapes = _serving_param_shapes(jax.eval_shape(
+            lambda: lm.init_params(jax.random.PRNGKey(0), cfg)
+        ))
+        p_specs = pspecs.param_pspecs(params_shapes, rules, mesh)
+        params_in = jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)
+            ),
+            params_shapes,
+            p_specs,
+        )
+        in_sh = (
+            jax.tree.map(lambda sp: NamedSharding(mesh, sp), p_specs),
+            jax.tree.map(lambda s: s.sharding, specs),
+        )
+        return prefill, (params_in, specs), in_sh, None
+
+    # decode
+    def serve_step(params, batch):
+        with use_mesh(mesh, rules):
+            return lm.decode_step(
+                params, cfg, batch["token"], batch["pos"], batch["cache"]
+            )
+
+    params_shapes = _serving_param_shapes(jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg)
+    ))
+    p_specs = pspecs.param_pspecs(params_shapes, rules, mesh)
+    params_in = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)
+        ),
+        params_shapes,
+        p_specs,
+    )
+    in_sh = (
+        jax.tree.map(lambda sp: NamedSharding(mesh, sp), p_specs),
+        jax.tree.map(lambda s: getattr(s, "sharding", None), specs),
+    )
+    # explicit out shardings: logits batch-sharded; the new cache keeps the
+    # input cache layout (without this, sharding propagation can replicate
+    # the seq-sharded cache on output — 26 GiB/dev for yi-9b decode_32k)
+    batch_ax = _batch_axes(rules)
+    logits_sh = NamedSharding(
+        mesh, _valid_spec(mesh, P(batch_ax), (shape.global_batch,))
+    )
+    cache_sh = jax.tree.map(lambda s: s.sharding, specs["cache"])
+    out_sh = (logits_sh, cache_sh)
+    return serve_step, (params_in, specs), in_sh, out_sh

@@ -1,0 +1,33 @@
+"""Trace-time flags threaded through the model code.
+
+``unroll_scans`` — XLA's ``cost_analysis`` counts a while-loop body once
+(measured in EXPERIMENTS.md §Dry-run), so the roofline pass unrolls the
+supercell scan and the inner chunk scans (attention q-chunks, mamba/mLSTM
+chunk scans) to make HLO_FLOPs/bytes/collectives exact.  Functional runs
+keep scans (flat compile time).  The sLSTM time scan is never unrolled
+(4k steps); the roofline module applies its analytic correction instead.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+
+_UNROLL: ContextVar[bool] = ContextVar("unroll_scans", default=False)
+
+
+def unroll_scans() -> bool:
+    return _UNROLL.get()
+
+
+@contextlib.contextmanager
+def set_unroll_scans(value: bool):
+    token = _UNROLL.set(value)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(token)
+
+
+def scan_unroll_arg() -> int | bool:
+    """Pass as lax.scan's ``unroll=``."""
+    return True if _UNROLL.get() else 1

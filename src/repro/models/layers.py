@@ -1,0 +1,132 @@
+"""Shared neural primitives (pure functions over param pytrees).
+
+Conventions:
+- params are fp32 pytrees; compute casts to the config dtype (bf16) and
+  matmuls accumulate in fp32 (``preferred_element_type``);
+- every weight/activation is annotated with logical axes via
+  ``repro.dist.sharding.shard`` — a no-op without an active mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+VOCAB_PAD = 512  # embedding tables padded for clean TP sharding
+
+
+def padded_vocab(v: int) -> int:
+    return ((v + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+def dense_init(key, in_dim: int, out_dims, scale: Optional[float] = None):
+    out_dims = (out_dims,) if isinstance(out_dims, int) else tuple(out_dims)
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return jax.random.normal(key, (in_dim, *out_dims), jnp.float32) * scale
+
+
+def matmul(x, w, dtype):
+    return jax.lax.dot_general(
+        x.astype(dtype),
+        w.astype(dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * (1.0 + gamma)).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * (1.0 + gamma) + beta).astype(
+        x.dtype
+    )
+
+
+def softcap(x, cap: float):
+    if cap <= 0.0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# -- rotary embeddings ------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- embedding / unembedding -------------------------------------------------
+
+
+def embed_init(key, vocab: int, d_model: int):
+    return (
+        jax.random.normal(key, (padded_vocab(vocab), d_model), jnp.float32) * 0.02
+    )
+
+
+def embed_lookup(table, tokens, dtype):
+    out = jnp.take(table.astype(dtype), tokens, axis=0)
+    return out * jnp.asarray(math.sqrt(table.shape[1]), dtype)
+
+
+def unembed_logits(x, table, vocab: int, dtype, final_softcap: float = 0.0):
+    """x @ table^T with padded-column masking."""
+    logits = jax.lax.dot_general(
+        x.astype(dtype),
+        table.astype(dtype),
+        (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    logits = softcap(logits, final_softcap)
+    pad = table.shape[0] - vocab
+    if pad:
+        mask = jnp.concatenate(
+            [jnp.zeros((vocab,), jnp.float32), jnp.full((pad,), -1e9, jnp.float32)]
+        )
+        logits = logits + mask
+    return logits
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+
+def swiglu_init(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d_model, d_ff),       # gate
+        "wu": dense_init(k2, d_model, d_ff),       # up
+        "wo": dense_init(k3, d_ff, d_model),
+    }
+
+
+def swiglu_apply(p, x, dtype):
+    x = shard(x, "batch", "seq", "embed_act")
+    g = matmul(x, shard(p["wi"], "embed", "mlp"), dtype)
+    u = matmul(x, shard(p["wu"], "embed", "mlp"), dtype)
+    h = jax.nn.silu(g) * u
+    h = shard(h.astype(dtype), "batch", "seq", "mlp_act")
+    out = matmul(h, shard(p["wo"], "mlp", "embed"), dtype)
+    return shard(out.astype(dtype), "batch", "seq", "embed_act")

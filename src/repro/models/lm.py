@@ -1,0 +1,451 @@
+"""Model assembly: embedding → scanned supercells → norm → logits.
+
+Heterogeneous stacks (jamba, gemma2, xlstm) repeat a *supercell* of block
+kinds; parameters are stacked per slot over supercells and the stack runs
+under ``lax.scan`` — one compiled cell body regardless of depth (flat
+compile time, the production pattern).
+
+Three entry points per model:
+  forward_train    — full-sequence forward, logits for the loss;
+  forward_prefill  — forward + cache construction (inference prefill);
+  decode_step      — one token against the cache (decode / long-context).
+
+Encoder-decoder (seamless) adds an encoder stack + cross-attention;
+modality stubs (audio frames / ViT patches) enter as precomputed
+embeddings per the assignment spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA, MLSTM, ModelConfig, SLSTM
+from repro.dist.sharding import shard
+from repro.models import attention as attn
+from repro.models.flags import scan_unroll_arg
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    embed_lookup,
+    rms_norm,
+    swiglu_apply,
+    swiglu_init,
+    unembed_logits,
+)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _slot_init(key, cfg: ModelConfig, slot: int, cross: bool = False) -> dict:
+    kind = cfg.block_pattern[slot]
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {"norm_mixer": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if kind in (ATTN, ATTN_LOCAL):
+        p["attn"] = attn.attn_init(ks[0], cfg)
+    elif kind == MAMBA:
+        p["mamba"] = mamba_mod.mamba_init(ks[0], cfg)
+    elif kind == MLSTM:
+        p["mlstm"] = xlstm_mod.mlstm_init(ks[0], cfg)
+    elif kind == SLSTM:
+        p["slstm"] = xlstm_mod.slstm_init(ks[0], cfg)
+    if cross:
+        p["norm_cross"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["cross"] = attn.attn_init(ks[1], cfg)
+    if cfg.d_ff > 0:
+        p["norm_ffn"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if cfg.layer_is_moe(slot):
+            p["moe"] = moe_mod.moe_init(ks[2], cfg)
+        else:
+            p["ffn"] = swiglu_init(ks[2], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    n_cells = cfg.n_supercells
+    cells = []
+    cell_keys = jax.random.split(ks[0], n_cells)
+    for c in range(n_cells):
+        slot_keys = jax.random.split(cell_keys[c], len(cfg.block_pattern))
+        cells.append(
+            {
+                f"slot{s}": _slot_init(
+                    slot_keys[s], cfg, s, cross=cfg.is_encoder_decoder
+                )
+                for s in range(len(cfg.block_pattern))
+            }
+        )
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *cells)
+    params = {
+        "embed": embed_init(ks[1], cfg.vocab_size, cfg.d_model),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "cells": stacked,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(ks[2], cfg.vocab_size, cfg.d_model)
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(ks[3], cfg.n_encoder_layers)
+        enc_cfg = dataclasses.replace(cfg, block_pattern=(ATTN,))
+        enc_layers = [
+            _slot_init(ek, enc_cfg, 0, cross=False) for ek in enc_keys
+        ]
+        params["encoder"] = {
+            "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_layers),
+            "norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    if cfg.modality == "vision" and cfg.modality_dim:
+        params["projector"] = {
+            "w1": dense_init(ks[4], cfg.modality_dim, cfg.d_model),
+            "w2": dense_init(ks[5], cfg.d_model, cfg.d_model),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+
+def _ffn_part(slot_p, x, cfg, dtype, aux):
+    if cfg.d_ff <= 0:
+        return x, aux
+    h = rms_norm(x, slot_p["norm_ffn"], cfg.norm_eps)
+    if "moe" in slot_p:
+        y, moe_aux = moe_mod.moe_apply(slot_p["moe"], h, cfg, dtype)
+        aux = {k: aux.get(k, 0.0) + v for k, v in moe_aux.items()} if aux is not None else None
+    else:
+        y = swiglu_apply(slot_p["ffn"], h, dtype)
+    return x + y, aux
+
+
+def _run_slot_train(slot_p, x, cfg, slot, dtype, memory, aux, q_chunk):
+    kind = cfg.layer_kind(slot)
+    h = rms_norm(x, slot_p["norm_mixer"], cfg.norm_eps)
+    if kind in (ATTN, ATTN_LOCAL):
+        y, _ = attn.self_attention(
+            slot_p["attn"], h, cfg, kind=kind, dtype=dtype, q_chunk=q_chunk
+        )
+    elif kind == MAMBA:
+        y, _ = mamba_mod.mamba_apply(slot_p["mamba"], h, cfg, dtype)
+    elif kind == MLSTM:
+        y, _ = xlstm_mod.mlstm_apply(slot_p["mlstm"], h, cfg, dtype)
+    elif kind == SLSTM:
+        y, _ = xlstm_mod.slstm_apply(slot_p["slstm"], h, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if memory is not None:
+        hc = rms_norm(x, slot_p["norm_cross"], cfg.norm_eps)
+        x = x + attn.cross_attention(slot_p["cross"], hc, memory, cfg, dtype=dtype)
+    return _ffn_part(slot_p, x, cfg, dtype, aux)
+
+
+# --------------------------------------------------------------------------
+# embedding / frontends
+# --------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg: ModelConfig, tokens, modality=None, dtype=None):
+    dtype = dtype or _dtype(cfg)
+    x = embed_lookup(params["embed"], tokens, dtype)
+    if cfg.modality == "vision" and modality is not None:
+        h = jnp.einsum("bmd,de->bme", modality.astype(dtype),
+                       params["projector"]["w1"].astype(dtype),
+                       preferred_element_type=jnp.float32)
+        h = jax.nn.gelu(h).astype(dtype)
+        vis = jnp.einsum("bme,ef->bmf", h, params["projector"]["w2"].astype(dtype),
+                         preferred_element_type=jnp.float32).astype(dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    return shard(x, "batch", "seq", "embed_act")
+
+
+def encode(params, cfg: ModelConfig, frames, dtype=None):
+    """Bidirectional encoder over (stub) modality frame embeddings."""
+    dtype = dtype or _dtype(cfg)
+    x = frames.astype(dtype)
+    enc_cfg = dataclasses.replace(cfg, block_pattern=(ATTN,))
+
+    def layer(x, lp):
+        h = rms_norm(x, lp["norm_mixer"], cfg.norm_eps)
+        q, k, v = attn._project_qkv(lp["attn"], h, h, enc_cfg, dtype, None, None)
+        o = attn.chunked_attention(q, k, v, causal=False, dtype=dtype)
+        x = x + attn._out_proj(lp["attn"], o, enc_cfg, dtype)
+        x, _ = _ffn_part(lp, x, enc_cfg, dtype, None)
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, params["encoder"]["layers"], unroll=scan_unroll_arg())
+    return rms_norm(x, params["encoder"]["norm"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# train / prefill forward
+# --------------------------------------------------------------------------
+
+
+def forward_train(
+    params,
+    cfg: ModelConfig,
+    tokens,
+    modality=None,
+    remat: bool = True,
+    q_chunk: int = 1024,
+):
+    """tokens: [B, S_text] → (logits [B,S,Vpad], aux dict)."""
+    dtype = _dtype(cfg)
+    memory = None
+    if cfg.is_encoder_decoder:
+        assert modality is not None, "encoder-decoder needs encoder frames"
+        memory = encode(params, cfg, modality, dtype)
+        x = embed_inputs(params, cfg, tokens, None, dtype)
+    else:
+        x = embed_inputs(params, cfg, tokens, modality, dtype)
+
+    def cell(carry, cell_p):
+        x, aux = carry
+        for s in range(len(cfg.block_pattern)):
+            x, aux = _run_slot_train(
+                cell_p[f"slot{s}"], x, cfg, s, dtype, memory, aux, q_chunk
+            )
+            x = shard(x, "batch", "seq", "embed_act")
+        return (x, aux), None
+
+    cell_fn = jax.checkpoint(cell) if remat else cell
+    aux0 = (
+        {"moe_lb_loss": jnp.float32(0.0), "moe_z_loss": jnp.float32(0.0)}
+        if cfg.moe is not None and cfg.moe_every > 0
+        else {}
+    )
+    (x, aux), _ = jax.lax.scan(cell_fn, (x, aux0), params["cells"], unroll=scan_unroll_arg())
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    logits = unembed_logits(x, table, cfg.vocab_size, dtype, cfg.logit_softcap)
+    return shard(logits, "batch", "seq", "vocab_act"), aux
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+
+def _slot_cache_len(cfg: ModelConfig, slot: int, max_len: int) -> int:
+    kind = cfg.layer_kind(slot)
+    if kind == ATTN_LOCAL and cfg.local_window > 0:
+        return min(cfg.local_window, max_len)
+    return max_len
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=None, memory_len: int = 0
+) -> dict:
+    """Cache pytree, stacked over supercells per slot.
+
+    For encoder-decoder models, ``memory_len`` adds cached cross-attention
+    K/V per slot (filled at prefill, read-only during decode)."""
+    dtype = dtype or _dtype(cfg)
+    n_cells = cfg.n_supercells
+    kh, hd = cfg.n_kv_heads, cfg.head_dim_
+    cache: dict[str, Any] = {}
+    for s, kind in enumerate(cfg.block_pattern):
+        if kind in (ATTN, ATTN_LOCAL):
+            T = _slot_cache_len(cfg, s, max_len)
+            cache[f"slot{s}"] = {
+                "k": jnp.zeros((n_cells, batch, T, kh, hd), dtype),
+                "v": jnp.zeros((n_cells, batch, T, kh, hd), dtype),
+            }
+            if cfg.is_encoder_decoder and memory_len:
+                cache[f"slot{s}"]["ck"] = jnp.zeros(
+                    (n_cells, batch, memory_len, kh, hd), dtype
+                )
+                cache[f"slot{s}"]["cv"] = jnp.zeros(
+                    (n_cells, batch, memory_len, kh, hd), dtype
+                )
+        elif kind == MAMBA:
+            conv, h = mamba_mod.mamba_init_state(cfg, batch, dtype)
+            cache[f"slot{s}"] = {
+                "conv": jnp.broadcast_to(conv, (n_cells,) + conv.shape),
+                "h": jnp.broadcast_to(h, (n_cells,) + h.shape),
+            }
+        elif kind == MLSTM:
+            C, n = xlstm_mod.mlstm_init_state(cfg, batch)
+            cache[f"slot{s}"] = {
+                "C": jnp.broadcast_to(C, (n_cells,) + C.shape),
+                "n": jnp.broadcast_to(n, (n_cells,) + n.shape),
+            }
+        elif kind == SLSTM:
+            st = xlstm_mod.slstm_init_state(cfg, batch)
+            cache[f"slot{s}"] = {
+                f"s{i}": jnp.broadcast_to(t, (n_cells,) + t.shape)
+                for i, t in enumerate(st)
+            }
+    return cache
+
+
+def grow_cache(cfg: ModelConfig, cache: dict, new_len: int, prefill_len: int) -> dict:
+    """Extend attention-cache capacity with a zero tail (serving: prefill
+    length < decode budget).  Valid when the existing ring has not wrapped
+    (prefill_len ≤ current capacity), so slot == position."""
+    out = {}
+    for key, sc in cache.items():
+        s = int(key[4:])
+        kind = cfg.layer_kind(s)
+        if kind in (ATTN, ATTN_LOCAL) and "k" in sc:
+            T = sc["k"].shape[2]
+            target = _slot_cache_len(cfg, s, new_len)
+            if target > T:
+                assert prefill_len <= T, (
+                    "cannot grow a wrapped ring cache (prefill_len > capacity)"
+                )
+                pad = [(0, 0)] * sc["k"].ndim
+                pad[2] = (0, target - T)
+                sc = dict(sc, k=jnp.pad(sc["k"], pad), v=jnp.pad(sc["v"], pad))
+        out[key] = sc
+    return out
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+
+def forward_prefill(
+    params, cfg: ModelConfig, tokens, modality=None, q_chunk: int = 1024
+):
+    """Full-sequence forward that also builds the decode cache.
+
+    Returns (logits_last [B,Vpad], cache).  Cache lengths equal the
+    prompt length (decode_32k-style serving appends into preallocated
+    buffers sized by the driver; here prefill fills exactly S).
+    """
+    dtype = _dtype(cfg)
+    memory = None
+    if cfg.is_encoder_decoder:
+        memory = encode(params, cfg, modality, dtype)
+        x = embed_inputs(params, cfg, tokens, None, dtype)
+    else:
+        x = embed_inputs(params, cfg, tokens, modality, dtype)
+    B, S = x.shape[0], x.shape[1]
+
+    def cell(carry, cell_p):
+        x = carry
+        caches = {}
+        for s in range(len(cfg.block_pattern)):
+            slot_p = cell_p[f"slot{s}"]
+            kind = cfg.layer_kind(s)
+            h = rms_norm(x, slot_p["norm_mixer"], cfg.norm_eps)
+            if kind in (ATTN, ATTN_LOCAL):
+                y, (k, v) = attn.self_attention(
+                    slot_p["attn"], h, cfg, kind=kind, dtype=dtype, q_chunk=q_chunk
+                )
+                T = _slot_cache_len(cfg, s, S)
+                kc, vc = k[:, -T:], v[:, -T:]
+                if S % T:
+                    # ring layout: slot = position % T (what decode's
+                    # rolling-cache reconstruction expects)
+                    kc = jnp.roll(kc, S % T, axis=1)
+                    vc = jnp.roll(vc, S % T, axis=1)
+                caches[f"slot{s}"] = {"k": kc, "v": vc}
+                if memory is not None:
+                    ck, cv = attn.project_cross_kv(
+                        slot_p["cross"], memory, cfg, dtype
+                    )
+                    caches[f"slot{s}"]["ck"] = ck
+                    caches[f"slot{s}"]["cv"] = cv
+            elif kind == MAMBA:
+                y, (conv, hst) = mamba_mod.mamba_apply(slot_p["mamba"], h, cfg, dtype)
+                caches[f"slot{s}"] = {"conv": conv, "h": hst}
+            elif kind == MLSTM:
+                y, (C, n) = xlstm_mod.mlstm_apply(slot_p["mlstm"], h, cfg, dtype)
+                caches[f"slot{s}"] = {"C": C, "n": n}
+            elif kind == SLSTM:
+                y, st = xlstm_mod.slstm_apply(slot_p["slstm"], h, cfg, dtype)
+                caches[f"slot{s}"] = {f"s{i}": t for i, t in enumerate(st)}
+            x = x + y
+            if memory is not None:
+                hc = rms_norm(x, slot_p["norm_cross"], cfg.norm_eps)
+                x = x + attn.cross_attention(slot_p["cross"], hc, memory, cfg, dtype=dtype)
+            x, _ = _ffn_part(slot_p, x, cfg, dtype, None)
+            x = shard(x, "batch", "seq", "embed_act")
+        return x, caches
+
+    x, cache = jax.lax.scan(cell, x, params["cells"], unroll=scan_unroll_arg())
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    logits = unembed_logits(x[:, -1], table, cfg.vocab_size, dtype, cfg.logit_softcap)
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, cache, memory=None):
+    """token: [B] ids; pos: scalar position; cache from init_cache/prefill.
+
+    Returns (logits [B,Vpad], new_cache).
+    """
+    dtype = _dtype(cfg)
+    x = embed_lookup(params["embed"], token[:, None], dtype)  # [B,1,D]
+
+    def cell(x, inp):
+        cell_p, cell_cache = inp
+        new_cache = {}
+        for s in range(len(cfg.block_pattern)):
+            slot_p = cell_p[f"slot{s}"]
+            sc = cell_cache[f"slot{s}"]
+            kind = cfg.layer_kind(s)
+            h = rms_norm(x, slot_p["norm_mixer"], cfg.norm_eps)
+            if kind in (ATTN, ATTN_LOCAL):
+                y, nk, nv = attn.decode_self_attention(
+                    slot_p["attn"], h, sc["k"], sc["v"], pos, cfg,
+                    kind=kind, dtype=dtype,
+                )
+                new_cache[f"slot{s}"] = {"k": nk, "v": nv}
+                if "ck" in sc:  # enc-dec: cached cross K/V (read-only)
+                    new_cache[f"slot{s}"]["ck"] = sc["ck"]
+                    new_cache[f"slot{s}"]["cv"] = sc["cv"]
+            elif kind == MAMBA:
+                y, (conv, hst) = mamba_mod.mamba_decode_step(
+                    slot_p["mamba"], h, cfg, dtype, (sc["conv"], sc["h"])
+                )
+                new_cache[f"slot{s}"] = {"conv": conv, "h": hst}
+            elif kind == MLSTM:
+                y, (C, n) = xlstm_mod.mlstm_apply(
+                    slot_p["mlstm"], h, cfg, dtype, chunk=1, state=(sc["C"], sc["n"])
+                )
+                new_cache[f"slot{s}"] = {"C": C, "n": n}
+            elif kind == SLSTM:
+                st = tuple(sc[f"s{i}"] for i in range(4))
+                y, st = xlstm_mod.slstm_apply(slot_p["slstm"], h, cfg, dtype, state=st)
+                new_cache[f"slot{s}"] = {f"s{i}": t for i, t in enumerate(st)}
+            x = x + y
+            if "ck" in sc:  # cached cross-attention K/V from prefill
+                hc = rms_norm(x, slot_p["norm_cross"], cfg.norm_eps)
+                x = x + attn.cross_decode_attention(
+                    slot_p["cross"], hc, sc["ck"], sc["cv"], cfg, dtype=dtype
+                )
+            elif memory is not None:
+                hc = rms_norm(x, slot_p["norm_cross"], cfg.norm_eps)
+                x = x + attn.cross_attention(slot_p["cross"], hc, memory, cfg, dtype=dtype)
+            x, _ = _ffn_part(slot_p, x, cfg, dtype, None)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(cell, x, (params["cells"], cache), unroll=scan_unroll_arg())
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    logits = unembed_logits(x[:, 0], table, cfg.vocab_size, dtype, cfg.logit_softcap)
+    return logits, new_cache

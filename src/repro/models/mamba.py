@@ -1,0 +1,187 @@
+"""Mamba block (jamba's SSM layer), TPU-adapted.
+
+Hardware adaptation (DESIGN.md §2): Mamba-1's per-channel selective scan
+is a GPU-kernel-shaped recurrence; on TPU the MXU wants the *chunked SSD
+formulation* (Mamba-2): per-head scalar decay, intra-chunk attention-like
+L×L matmuls, inter-chunk state carried by ``lax.scan``.  Per-chunk
+tensors are transient inside the scan body, so memory is
+O(B·L²·heads/chunk) instead of O(B·S²).
+
+Sequence dependency structure (the paper's halo story, DESIGN.md §4):
+the causal conv reads ``[t-3, t]`` (halo k-1 = 3) and the scan carries a
+[heads, N, P] state across chunk/shard boundaries — both are bounded
+one-sided exchanges under sequence parallelism, expressed through the
+same dmp/comm machinery as stencil halos (repro.dist.context_parallel).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.layers import dense_init
+from repro.models.flags import scan_unroll_arg
+
+HEAD_P = 64  # channels per SSD head
+
+
+def mamba_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // HEAD_P
+    return d_inner, n_heads
+
+
+def mamba_init(key, cfg):
+    d = cfg.d_model
+    d_inner, nh = mamba_dims(cfg)
+    N = cfg.ssm_state_dim
+    k = jax.random.split(key, 8)
+    return {
+        "in_proj": dense_init(k[0], d, 2 * d_inner),        # x and gate z
+        "conv_w": jax.random.normal(k[1], (cfg.ssm_conv_width, d_inner), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "dt_proj": dense_init(k[2], d, nh),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01))),  # softplus⁻¹
+        "B_proj": dense_init(k[3], d, N),
+        "C_proj": dense_init(k[4], d, N),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": dense_init(k[5], d_inner, d),
+    }
+
+
+def _causal_conv(x, w, b, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along seq.  x: [B,S,C]; w: [K,C].
+
+    ``state`` ([B,K-1,C], previous inputs) enables decode/chunk stitching;
+    returns (y, new_state).
+    """
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)
+    y = sum(
+        xx[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    new_state = xx[:, -(K - 1) :, :] if K > 1 else state
+    return y + b[None, None, :], new_state
+
+
+def _segsum_decay(a):
+    """a: [..., L] per-step log-decays → [..., L, L] lower-tri decay matrix
+    exp(cum[t]-cum[s]) for s<=t, 0 above diagonal (in exp space)."""
+    L = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # [t, s]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(tri, jnp.exp(diff), 0.0)
+
+
+def mamba_ssd_scan(x, dt, B, C, A, chunk: int, h0=None):
+    """Chunked selective scan.
+
+    x:  [Bt, S, nh, P]   inputs per head
+    dt: [Bt, S, nh]      positive step sizes
+    B:  [Bt, S, N], C: [Bt, S, N]
+    A:  [nh]             negative per-head decay rates
+    Returns (y [Bt,S,nh,P], h_final [Bt,nh,N,P]).
+    """
+    Bt, S, nh, P = x.shape
+    N = B.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nchunk = S // L
+
+    def resh(t, extra):
+        return t.reshape((Bt, nchunk, L) + extra)
+
+    xc = resh(x, (nh, P))
+    dtc = resh(dt, (nh,))
+    Bc = resh(B, (N,))
+    Cc = resh(C, (N,))
+
+    if h0 is None:
+        h0 = jnp.zeros((Bt, nh, N, P), jnp.float32)
+
+    def chunk_step(h, inp):
+        xk, dtk, Bk, Ck = inp  # [Bt,L,nh,P], [Bt,L,nh], [Bt,L,N], [Bt,L,N]
+        a = dtk * A[None, None, :]                       # [Bt,L,nh] (<=0)
+        decay = _segsum_decay(a.transpose(0, 2, 1))      # [Bt,nh,L,L]
+        cum = jnp.cumsum(a, axis=1)                      # [Bt,L,nh]
+        # intra-chunk: scores[t,s] = (C_t·B_s) decay[t,s] dt_s
+        cb = jnp.einsum("btn,bsn->bts", Ck, Bk)          # [Bt,L,L]
+        scores = cb[:, None] * decay * dtk.transpose(0, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhts,bshp->bthp", scores, xk)
+        # contribution of incoming state
+        state_decay = jnp.exp(cum)                       # [Bt,L,nh]
+        y_state = jnp.einsum("btn,bhnp->bthp", Ck, h)
+        y_state = y_state * state_decay[..., None]
+        # state update
+        chunk_decay = jnp.exp(cum[:, -1])                # [Bt,nh]
+        rel = jnp.exp(cum[:, -1][:, None] - cum)         # [Bt,L,nh]
+        dB = (dtk * rel)[..., None] * Bk[:, :, None, :]  # [Bt,L,nh,N]
+        h_new = h * chunk_decay[..., None, None] + jnp.einsum(
+            "blhn,blhp->bhnp", dB, xk
+        )
+        return h_new, (y_intra + y_state).astype(x.dtype)
+
+    inputs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        dtc.transpose(1, 0, 2, 3),
+        Bc.transpose(1, 0, 2, 3),
+        Cc.transpose(1, 0, 2, 3),
+    )
+    h_final, ys = jax.lax.scan(chunk_step, h0, inputs, unroll=scan_unroll_arg())
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bt, S, nh, P)
+    return y, h_final
+
+
+def mamba_apply(p, x, cfg, dtype, chunk: int = 256, state=None):
+    """x: [B,S,D] → (y [B,S,D], new_state) — train/prefill path.
+
+    ``state``: optional (conv_state [B,K-1,d_inner], h [B,nh,N,P]).
+    """
+    B_, S, D = x.shape
+    d_inner, nh = mamba_dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x.astype(dtype),
+                    shard(p["in_proj"], "embed", "mlp").astype(dtype),
+                    preferred_element_type=jnp.float32)
+    xr, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state[0] if state is not None else None
+    xr, new_conv_state = _causal_conv(
+        xr.astype(jnp.float32), p["conv_w"], p["conv_b"], conv_state
+    )
+    xr = jax.nn.silu(xr)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x.astype(dtype), p["dt_proj"].astype(dtype),
+                   preferred_element_type=jnp.float32) + p["dt_bias"]
+    )
+    Bm = jnp.einsum("bsd,dn->bsn", x.astype(dtype), p["B_proj"].astype(dtype),
+                    preferred_element_type=jnp.float32)
+    Cm = jnp.einsum("bsd,dn->bsn", x.astype(dtype), p["C_proj"].astype(dtype),
+                    preferred_element_type=jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    xh = xr.reshape(B_, S, nh, HEAD_P)
+    h0 = state[1] if state is not None else None
+    y, h = mamba_ssd_scan(xh, dt, Bm, Cm, A, chunk=chunk, h0=h0)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B_, S, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(dtype),
+                     shard(p["out_proj"], "mlp", "embed").astype(dtype),
+                     preferred_element_type=jnp.float32)
+    return out.astype(dtype), (new_conv_state.astype(dtype), h)
+
+
+def mamba_decode_step(p, x, cfg, dtype, state):
+    """Single-token decode: x [B,1,D], state (conv [B,K-1,di], h [B,nh,N,P])."""
+    return mamba_apply(p, x, cfg, dtype, chunk=1, state=state)
+
+
+def mamba_init_state(cfg, batch: int, dtype):
+    d_inner, nh = mamba_dims(cfg)
+    return (
+        jnp.zeros((batch, cfg.ssm_conv_width - 1, d_inner), dtype),
+        jnp.zeros((batch, nh, cfg.ssm_state_dim, HEAD_P), jnp.float32),
+    )

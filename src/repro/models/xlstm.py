@@ -1,0 +1,244 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and recurrent sLSTM
+[arXiv:2405.04517], TPU-adapted.
+
+- **mLSTM** (matrix memory, fully parallelizable): C_t = f_t C_{t-1} +
+  i_t v_t k_tᵀ, h_t = (q_t·C_t) / max(|q_t·n_t|, 1).  Computed chunkwise
+  like the SSD scan (decay matrices from cumulative log-f gates, state
+  carried across chunks) — the MXU-friendly form; gates are
+  log-sigmoid-stabilized.
+- **sLSTM** (scalar memory, inherently sequential): per-timestep
+  ``lax.scan`` with block-diagonal (per-head) recurrent weights and the
+  paper's m-state exponential stabilization.  The xLSTM paper itself
+  resorts to a fused recurrent GPU kernel here; on TPU this stays a
+  sequential scan (documented in DESIGN.md §Arch-applicability).
+
+The xLSTM-1.3b config uses d_ff = 0: mLSTM blocks pre-up-project 2×,
+sLSTM blocks carry a 4/3 gated MLP, matching the paper's block designs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.layers import dense_init, rms_norm
+from repro.models.flags import scan_unroll_arg
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg):
+    """TP layout (EXPERIMENTS.md §Perf B): the mLSTM state is an OUTER
+    PRODUCT C = Σ k⊗v, so the only shardable inner dim is hd_v — q, k and
+    the gates stay model-replicated (their projections are local given a
+    replicated xi), v/z/h are hd_v-sharded, and the block pays exactly
+    ONE activation all-reduce, at down_proj (row-parallel).  The previous
+    layout (xi TP-sharded, q/k/v row-parallel) paid THREE f32 [B,S,nh,hd]
+    all-reduces per layer — 21.5 GiB per supercell at prefill_32k."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    d_inner = 2 * d
+    hd = d_inner // nh
+    k = jax.random.split(key, 8)
+    return {
+        "up_x": dense_init(k[0], d, d_inner),      # replicated branch
+        "up_z": dense_init(k[7], d, (nh, hd)),     # gate branch, hd_v-sharded
+        "wq": dense_init(k[1], d_inner, (nh, hd)),
+        "wk": dense_init(k[2], d_inner, (nh, hd)),
+        "wv": dense_init(k[3], d_inner, (nh, hd)),
+        "wi": dense_init(k[4], d_inner, nh, scale=0.01),
+        "wf": dense_init(k[5], d_inner, nh, scale=0.01),
+        "bf": jnp.full((nh,), 3.0),  # forget-gate bias → long memory at init
+        "out_norm": jnp.zeros((nh, hd), jnp.float32),  # per-head norm
+        "down_proj": jax.random.normal(k[6], (nh, hd, d), jnp.float32)
+        / (d_inner ** 0.5),
+    }
+
+
+def mlstm_chunk_scan(q, k, v, logf, logi, chunk: int, state=None):
+    """Chunkwise mLSTM.
+
+    q,k,v: [B,S,nh,hd]; logf,logi: [B,S,nh] (log-sigmoid forget, log input).
+    Returns (h [B,S,nh,hd], (C [B,nh,hd,hd], n [B,nh,hd])).
+    """
+    B, S, nh, hd = q.shape
+    L = min(chunk, S)
+    assert S % L == 0
+    nchunk = S // L
+    scale = hd ** -0.5
+
+    def resh(t, extra):
+        return t.reshape((B, nchunk, L) + extra).transpose(
+            (1, 0, 2) + tuple(range(3, 3 + len(extra)))
+        )
+
+    qc, kc, vc = (resh(t, (nh, hd)) for t in (q, k, v))
+    fc = resh(logf, (nh,))
+    ic = resh(logi, (nh,))
+
+    if state is None:
+        C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, nh, hd), jnp.float32)
+    else:
+        C0, n0 = state
+
+    def step(carry, inp):
+        C, n = carry
+        qk, kk, vk, fk, ik = inp
+        cum = jnp.cumsum(fk, axis=1)                       # [B,L,nh]
+        # stabilized intra-chunk weights: w[t,s] = exp(cum_t - cum_s + i_s - m_t)
+        logw = (
+            cum[:, :, None, :] - cum[:, None, :, :] + ik[:, None, :, :]
+        )  # [B,t,s,nh]
+        tri = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        logw = jnp.where(tri, logw, -jnp.inf)
+        m_intra = jnp.max(logw, axis=2)                    # [B,t,nh]
+        m_state = cum                                      # state weight log-scale
+        m = jnp.maximum(m_intra, m_state)
+        m = jnp.maximum(m, 0.0)
+        w = jnp.exp(logw - m[:, :, None, :])               # [B,t,s,nh]
+        scores = jnp.einsum("bthd,bshd->btsh", qk, kk) * scale
+        num_intra = jnp.einsum("btsh,btsh,bshd->bthd", scores, w, vk)
+        n_intra = jnp.einsum("btsh,bshd->bthd", w, kk)     # running key sum
+        den_intra = jnp.einsum("bthd,bthd->bth", qk, n_intra) * scale
+        state_w = jnp.exp(cum - m)                         # [B,L,nh]
+        num_state = jnp.einsum("bthd,bhde->bthe", qk * state_w[..., None], C) * scale
+        den_state = jnp.einsum("bthd,bhd->bth", qk * state_w[..., None], n) * scale
+        h = (num_intra + num_state) / jnp.maximum(
+            jnp.abs(den_intra + den_state), jnp.exp(-m) + 1e-6
+        )[..., None]
+        # state update (unnormalized, log-stabilized at chunk granularity)
+        tot = cum[:, -1]                                   # [B,nh]
+        rel = jnp.exp(tot[:, None] - cum + ik)             # [B,L,nh]
+        C_new = C * jnp.exp(tot)[:, :, None, None] + jnp.einsum(
+            "blhd,blhe->bhde", kk * rel[..., None], vk
+        )
+        n_new = n * jnp.exp(tot)[:, :, None] + jnp.einsum(
+            "blhd,blh->bhd", kk, rel
+        )
+        return (C_new, n_new), h.astype(q.dtype)
+
+    # note: num_intra already includes scores×w; rescale with q in einsum
+    (Cf, nf), hs = jax.lax.scan(step, (C0, n0), (qc, kc, vc, fc, ic), unroll=scan_unroll_arg())
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, hd)
+    return h, (Cf, nf)
+
+
+def mlstm_apply(p, x, cfg, dtype, chunk: int = 256, state=None):
+    B, S, D = x.shape
+    nh = cfg.n_heads
+    d_inner = 2 * D
+    xi = jnp.einsum("bsd,de->bse", x.astype(dtype),
+                    shard(p["up_x"], "embed", None).astype(dtype),
+                    preferred_element_type=jnp.float32).astype(dtype)
+    z = jnp.einsum("bsd,dhk->bshk", x.astype(dtype),
+                   shard(p["up_z"], "embed", None, "mlp").astype(dtype),
+                   preferred_element_type=jnp.float32).astype(dtype)
+    # xi is model-replicated; q/k projections are therefore local …
+    q = jnp.einsum("bse,ehd->bshd", xi, p["wq"].astype(dtype),
+                   preferred_element_type=jnp.float32)
+    k = jnp.einsum("bse,ehd->bshd", xi, p["wk"].astype(dtype),
+                   preferred_element_type=jnp.float32)
+    # … and v is hd_v-sharded (column-parallel) — the one inner dim the
+    # outer-product state C = Σ k⊗v can shard without cross-talk.
+    v = jnp.einsum("bse,ehd->bshd", xi, p["wv"].astype(dtype),
+                   preferred_element_type=jnp.float32)
+    v = shard(v, "batch", "seq", None, "mlp_act")
+    logi = jnp.einsum("bse,eh->bsh", xi, p["wi"].astype(dtype),
+                      preferred_element_type=jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bsh", xi, p["wf"].astype(dtype),
+                   preferred_element_type=jnp.float32) + p["bf"]
+    )
+    h, new_state = mlstm_chunk_scan(q, k, v, logf, logi, chunk, state)
+    # per-head norm (xLSTM's MultiHeadLayerNorm) keeps everything in the
+    # hd_v-sharded [B,S,nh,hd] form — no strided reshape/regather
+    h = rms_norm(h, p["out_norm"]) * jax.nn.silu(z.astype(jnp.float32)).astype(dtype)
+    out = jnp.einsum("bshk,hkd->bsd", h.astype(dtype),
+                     shard(p["down_proj"], None, "mlp", "embed").astype(dtype),
+                     preferred_element_type=jnp.float32)
+    return out.astype(dtype), new_state
+
+
+def mlstm_init_state(cfg, batch: int):
+    nh = cfg.n_heads
+    hd = 2 * cfg.d_model // nh
+    return (
+        jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        jnp.zeros((batch, nh, hd), jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    k = jax.random.split(key, 6)
+    return {
+        "w_gates": dense_init(k[0], d, (4, nh, hd)),       # i f z o from x
+        "r_gates": jax.random.normal(k[1], (4, nh, hd, hd), jnp.float32)
+        / (hd**0.5),                                        # block-diag recurrents
+        "b_gates": jnp.zeros((4, nh, hd), jnp.float32),
+        "up1": dense_init(k[2], d, (4 * d) // 3),
+        "up2": dense_init(k[3], d, (4 * d) // 3),
+        "down": dense_init(k[4], (4 * d) // 3, d),
+    }
+
+
+def slstm_apply(p, x, cfg, dtype, state=None):
+    """x: [B,S,D] → (y, state).  state = (c, n, h, m) each [B,nh,hd]."""
+    B, S, D = x.shape
+    nh = cfg.n_heads
+    hd = D // nh
+    gates_x = jnp.einsum("bsd,dghe->bsghe", x.astype(dtype),
+                         p["w_gates"].astype(dtype),
+                         preferred_element_type=jnp.float32)  # [B,S,4,nh,hd]
+
+    if state is None:
+        zeros = jnp.zeros((B, nh, hd), jnp.float32)
+        state = (zeros, zeros, zeros, zeros - 10.0)
+
+    R = p["r_gates"]
+
+    def step(carry, gx):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhe,ghef->bghf", h, R)          # [B,4,nh,hd]
+        it, ft, zt, ot = [gx[:, g] + rec[:, g] + p["b_gates"][g] for g in range(4)]
+        # exponential-gate stabilization (xLSTM eq. 15-17)
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        c_new = f_s * c + i_s * jnp.tanh(zt)
+        n_new = f_s * n + i_s
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new.astype(x.dtype)
+
+    state, hs = jax.lax.scan(step, state, gates_x.transpose(1, 0, 2, 3, 4))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, D)
+    # post-up gated MLP (4/3 factor)
+    g = jnp.einsum("bsd,de->bse", y.astype(dtype), p["up1"].astype(dtype),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("bsd,de->bse", y.astype(dtype), p["up2"].astype(dtype),
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.gelu(g) * u).astype(dtype)
+    out = jnp.einsum("bse,ed->bsd", h, p["down"].astype(dtype),
+                     preferred_element_type=jnp.float32)
+    return out.astype(dtype), state
+
+
+def slstm_init_state(cfg, batch: int):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return (z, z, z, z - 10.0)

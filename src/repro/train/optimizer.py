@@ -1,0 +1,99 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and
+warmup+cosine schedule — from scratch (no optax in this environment).
+
+Optimizer state inherits each parameter's sharding (ZeRO-1 falls out of
+the FSDP'd parameter shardings for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+
+
+def schedule(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * (step + 1.0) / max(cfg.warmup_steps, 1)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.peak_lr * (
+        cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def _decay_mask(path: tuple) -> bool:
+    """No weight decay on norms/biases/1-d scales."""
+    last = str(path[-1]) if path else ""
+    return not any(tok in last for tok in ("norm", "bias", "b_gates", "bf", "bq", "bk", "bv", "A_log", "D", "dt_bias"))
+
+
+def adamw_update(cfg: OptimizerConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    count = opt_state["count"] + 1
+    lr = schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    new_m = jax.tree.map(
+        lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, opt_state["m"], grads
+    )
+    new_v = jax.tree.map(
+        lambda v, g: cfg.b2 * v + (1 - cfg.b2) * jnp.square(g),
+        opt_state["v"],
+        grads,
+    )
+
+    paths_params, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_m = jax.tree.leaves(new_m)
+    flat_v = jax.tree.leaves(new_v)
+    new_leaves = []
+    for (path, p), m, v in zip(paths_params, flat_m, flat_v):
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if _decay_mask(path):
+            update = update + cfg.weight_decay * p
+        new_leaves.append(p - lr * update)
+    new_params = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return (
+        new_params,
+        {"m": new_m, "v": new_v, "count": count},
+        {"grad_norm": gnorm, "lr": lr},
+    )

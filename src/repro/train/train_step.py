@@ -1,0 +1,126 @@
+"""Loss + train step construction.
+
+``make_train_step`` builds the pjit-able ``(state, batch) → (state,
+metrics)`` function: next-token cross-entropy (+ z-loss + MoE aux),
+optional gradient-accumulation microbatching (``lax.scan`` over
+microbatches — compile-size-free), global-norm clip, AdamW.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.train import optimizer as opt
+
+Z_LOSS = 1e-4
+MOE_LB_WEIGHT = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    remat: bool = True
+    q_chunk: int = 1024
+    microbatches: int = 1
+    grad_compression: Optional[str] = None  # None | "int8" (dist/compression)
+
+
+def cross_entropy_loss(cfg: ModelConfig, logits, tokens):
+    """Next-token CE over text positions (skips modality prefix)."""
+    V = logits.shape[-1]
+    S_tok = tokens.shape[1]
+    prefix = logits.shape[1] - S_tok  # vision tokens prepended
+    logits = logits[:, prefix:, :]
+    pred = logits[:, :-1]
+    tgt = tokens[:, 1:]
+    logz = jax.nn.logsumexp(pred, axis=-1)
+    gold = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    zloss = Z_LOSS * jnp.square(logz).mean()
+    return ce, zloss
+
+
+def make_loss_fn(cfg: ModelConfig, options: TrainOptions):
+    def loss_fn(params, batch):
+        logits, aux = lm.forward_train(
+            params,
+            cfg,
+            batch["tokens"],
+            batch.get("modality"),
+            remat=options.remat,
+            q_chunk=options.q_chunk,
+        )
+        ce, zloss = cross_entropy_loss(cfg, logits, batch["tokens"])
+        loss = ce + zloss
+        metrics = {"ce": ce, "z_loss": zloss}
+        if aux:
+            loss = loss + MOE_LB_WEIGHT * aux["moe_lb_loss"] + aux["moe_z_loss"]
+            metrics.update(aux)
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: opt.OptimizerConfig,
+    options: Optional[TrainOptions] = None,
+):
+    options = options or TrainOptions()
+    loss_fn = make_loss_fn(cfg, options)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if options.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        n = options.microbatches
+
+        def micro(carry, mb):
+            acc, = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g / n, acc, grads)
+            return (acc,), (loss, metrics)
+
+        zero = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+        mbs = jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch
+        )
+        (grads,), (losses, metricses) = jax.lax.scan(micro, (zero,), mbs)
+        metrics = jax.tree.map(lambda m: m.mean(), metricses)
+        return losses.mean(), metrics, grads
+
+    def train_step(state, batch):
+        params, opt_state = state["params"], state["opt_state"]
+        loss, metrics, grads = compute_grads(params, batch)
+        if options.grad_compression == "int8":
+            from repro.dist.compression import int8_roundtrip
+
+            grads = int8_roundtrip(grads)
+        new_params, new_opt_state, om = opt.adamw_update(
+            opt_cfg, grads, opt_state, params
+        )
+        metrics = dict(metrics, loss=loss, **om)
+        new_state = {
+            "params": new_params,
+            "opt_state": new_opt_state,
+            "step": state["step"] + 1,
+        }
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig) -> dict:
+    params = lm.init_params(key, cfg)
+    return {
+        "params": params,
+        "opt_state": opt.init_opt_state(params),
+        "step": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,223 @@
+"""Multi-device distribution correctness worker.
+
+Run in a SUBPROCESS (tests/test_distributed.py) so the 8-device flag
+never leaks into the main pytest process:
+
+    python tests/dist_worker.py <scenario>
+
+Exit 0 = all assertions passed.  Each scenario compares an N-rank
+decomposed run (shard_map + dmp halo exchanges over virtual CPU devices)
+against the single-device run of the same program — the decomposition +
+swap machinery is correct by test, not by construction.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.core.program import CompileOptions, StencilComputation  # noqa: E402
+from repro.core.passes.decompose import (  # noqa: E402
+    make_strategy_1d,
+    make_strategy_2d,
+    make_strategy_3d,
+)
+from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction  # noqa: E402
+from repro.frontends.oec_like import ProgramBuilder  # noqa: E402
+
+
+def _jacobi(shape):
+    p = ProgramBuilder("jacobi", shape)
+    u = p.input("u")
+    out = p.output("out")
+    t = p.load(u)
+    nd = len(shape)
+    if nd == 2:
+        r = p.apply(
+            [t],
+            lambda b, u: (u.at(-1, 0) + u.at(1, 0) + u.at(0, -1) + u.at(0, 1)) * 0.25,
+        )
+    else:
+        r = p.apply(
+            [t],
+            lambda b, u: (
+                u.at(-1, 0, 0) + u.at(1, 0, 0) + u.at(0, -1, 0)
+                + u.at(0, 1, 0) + u.at(0, 0, -1) + u.at(0, 0, 1)
+            ) * (1.0 / 6.0),
+        )
+    p.store(r, out)
+    return p
+
+
+def _box(shape):
+    """Corner-reading stencil — exercises multi-round / diagonal paths."""
+    p = ProgramBuilder("box", shape)
+    u = p.input("u")
+    out = p.output("out")
+    t = p.load(u)
+    r = p.apply(
+        [t],
+        lambda b, u: u.at(-1, -1) + u.at(1, 1) * 0.5 + u.at(-1, 1) * 0.25
+        + u.at(0, 0),
+    )
+    p.store(r, out)
+    return p
+
+
+def _mesh(axes_shape, names):
+    devs = np.array(jax.devices()[: int(np.prod(axes_shape))]).reshape(axes_shape)
+    return Mesh(devs, names)
+
+
+def check(name, got, want, tol=0.0):
+    got, want = np.asarray(got), np.asarray(want)
+    if tol == 0.0:
+        ok = np.array_equal(got, want)
+    else:
+        ok = np.allclose(got, want, rtol=tol, atol=tol)
+    if not ok:
+        print(f"MISMATCH in {name}: max abs diff "
+              f"{np.abs(got - want).max()}")
+        sys.exit(1)
+    print(f"ok: {name}")
+
+
+def run_single(builder_fn, shape, boundary, **opts):
+    comp = builder_fn(shape).finish(boundary=boundary)
+    rng = np.random.default_rng(42)
+    u0 = rng.standard_normal(shape).astype(np.float32)
+    ref = comp.compile(options=CompileOptions())(u0, np.zeros_like(u0))
+    return u0, np.asarray(ref[0])
+
+
+def scenario_1d(boundary):
+    shape = (64, 32)
+    u0, want = run_single(_jacobi, shape, boundary)
+    mesh = _mesh((8,), ("x",))
+    comp = _jacobi(shape).finish(boundary=boundary)
+    step = comp.compile(mesh=mesh, strategy=make_strategy_1d(8))
+    got = step(u0, np.zeros(shape, np.float32))
+    # fp32 stencil: distribution must be bitwise-identical
+    check(f"1d-{boundary}", got[0], want)
+
+
+def scenario_2d(boundary):
+    shape = (32, 64)
+    u0, want = run_single(_jacobi, shape, boundary)
+    mesh = _mesh((4, 2), ("x", "y"))
+    comp = _jacobi(shape).finish(boundary=boundary)
+    step = comp.compile(mesh=mesh, strategy=make_strategy_2d((4, 2)))
+    got = step(u0, np.zeros(shape, np.float32))
+    check(f"2d-{boundary}", got[0], want)
+
+
+def scenario_3d():
+    shape = (16, 16, 32)
+    u0, want = run_single(_jacobi, shape, "periodic")
+    mesh = _mesh((2, 2, 2), ("x", "y", "z"))
+    comp = _jacobi(shape).finish(boundary="periodic")
+    step = comp.compile(mesh=mesh, strategy=make_strategy_3d((2, 2, 2)))
+    got = step(u0, np.zeros(shape, np.float32))
+    check("3d-periodic", got[0], want)
+
+
+def scenario_box(diagonal):
+    """Corner-reading stencil under 2D decomposition; with/without the
+    beyond-paper diagonal-exchange rewrite."""
+    shape = (32, 32)
+    u0, want = run_single(_box, shape, "periodic")
+    mesh = _mesh((2, 2), ("x", "y"))
+    comp = _box(shape).finish(boundary="periodic")
+    step = comp.compile(
+        mesh=mesh,
+        strategy=make_strategy_2d((2, 2)),
+        options=CompileOptions(diagonal=diagonal),
+    )
+    got = step(u0, np.zeros(shape, np.float32))
+    check(f"box-diagonal={diagonal}", got[0], want)
+
+
+def scenario_options(opt):
+    """overlap / comm_dialect / pallas backend under distribution."""
+    shape = (32, 64)
+    u0, want = run_single(_jacobi, shape, "periodic")
+    mesh = _mesh((4, 2), ("x", "y"))
+    comp = _jacobi(shape).finish(boundary="periodic")
+    kw = {}
+    tol = 0.0
+    if opt == "pallas":
+        kw["backend"] = "pallas"
+        tol = 1e-6
+    else:
+        kw[opt] = True
+    step = comp.compile(
+        mesh=mesh, strategy=make_strategy_2d((4, 2)), options=CompileOptions(**kw)
+    )
+    got = step(u0, np.zeros(shape, np.float32))
+    check(f"options-{opt}", got[0], want, tol=tol)
+
+
+def scenario_wide_halo():
+    """SDO-8 stencil (radius 4): halo wider than 1, both directions."""
+    shape = (64, 64)
+    g = Grid(shape=shape, extent=(1.0, 1.0))
+    u = TimeFunction(name="u", grid=g, space_order=8)
+    op = Operator(Eq(u.dt, 0.3 * u.laplace), dt=1e-6, boundary="periodic")
+    rng = np.random.default_rng(3)
+    u0 = rng.standard_normal(shape).astype(np.float32)
+    want = np.asarray(op.apply([u0], timesteps=2)[0])
+
+    mesh = _mesh((4, 2), ("x", "y"))
+    got = np.asarray(
+        op.apply(
+            [u0], timesteps=2, mesh=mesh, strategy=make_strategy_2d((4, 2))
+        )[0]
+    )
+    check("wide-halo-sdo8", got, want)
+
+
+def scenario_time_loop():
+    """Many timesteps under fori_loop + distribution (the fig. 8 path)."""
+    shape = (64, 32)
+    g = Grid(shape=shape, extent=(1.0, 1.0))
+    u = TimeFunction(name="u", grid=g, space_order=4)
+    op = Operator(Eq(u.dt, 0.5 * u.laplace), dt=1e-6, boundary="zero")
+    rng = np.random.default_rng(4)
+    u0 = rng.standard_normal(shape).astype(np.float32)
+    want = np.asarray(op.apply([u0], timesteps=20)[0])
+    mesh = _mesh((8,), ("x",))
+    got = np.asarray(
+        op.apply([u0], timesteps=20, mesh=mesh, strategy=make_strategy_1d(8))[0]
+    )
+    check("time-loop-20", got, want)
+
+
+SCENARIOS = {
+    "1d-zero": lambda: scenario_1d("zero"),
+    "1d-periodic": lambda: scenario_1d("periodic"),
+    "2d-zero": lambda: scenario_2d("zero"),
+    "2d-periodic": lambda: scenario_2d("periodic"),
+    "3d": scenario_3d,
+    "box": lambda: scenario_box(False),
+    "box-diagonal": lambda: scenario_box(True),
+    "overlap": lambda: scenario_options("overlap"),
+    "comm_dialect": lambda: scenario_options("comm_dialect"),
+    "pallas": lambda: scenario_options("pallas"),
+    "wide-halo": scenario_wide_halo,
+    "time-loop": scenario_time_loop,
+}
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    names = list(SCENARIOS) if which == "all" else [which]
+    for n in names:
+        SCENARIOS[n]()
+    print("ALL OK")

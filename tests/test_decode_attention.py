@@ -1,0 +1,62 @@
+"""Flash-style chunked decode attention == dense decode attention."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as attn
+from repro.configs import get_config
+from repro.configs.base import reduced_config
+
+
+@pytest.mark.parametrize("window", [0, 24])
+def test_online_softmax_matches_dense(monkeypatch, window):
+    cfg = dataclasses.replace(
+        reduced_config(get_config("qwen2-7b")),
+        dtype="float32",
+        local_window=window,
+    )
+    kind = "attn_local" if window else "attn"
+    p = attn.attn_init(jax.random.PRNGKey(0), cfg)
+    B, T = 3, 64
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((B, 1, cfg.d_model)), jnp.float32)
+    kh, hd = cfg.n_kv_heads, cfg.head_dim_
+    ck = jnp.asarray(rng.standard_normal((B, T, kh, hd)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, T, kh, hd)), jnp.float32)
+    pos = jnp.asarray([40, 55, 63], jnp.int32)  # per-slot positions
+
+    def run():
+        return attn.decode_self_attention(
+            p, x, ck, cv, pos, cfg, kind=kind, dtype=jnp.float32
+        )
+
+    # dense path (chunking disabled)
+    monkeypatch.setattr(attn, "DECODE_KV_CHUNK", 10**9)
+    o_dense, k1, v1 = run()
+    # chunked path (T=64 -> 8 chunks of 8)
+    monkeypatch.setattr(attn, "DECODE_KV_CHUNK", 8)
+    o_chunk, k2, v2 = run()
+
+    np.testing.assert_allclose(
+        np.asarray(o_dense), np.asarray(o_chunk), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+
+
+def test_chunked_path_used_for_long_caches(monkeypatch):
+    """Sanity: with a tiny threshold the scan body appears in the jaxpr."""
+    cfg = dataclasses.replace(reduced_config(get_config("yi-9b")), dtype="float32")
+    p = attn.attn_init(jax.random.PRNGKey(0), cfg)
+    monkeypatch.setattr(attn, "DECODE_KV_CHUNK", 16)
+    B, T = 2, 128
+    x = jnp.zeros((B, 1, cfg.d_model))
+    ck = jnp.zeros((B, T, cfg.n_kv_heads, cfg.head_dim_))
+    jaxpr = jax.make_jaxpr(
+        lambda x, ck: attn.decode_self_attention(
+            p, x, ck, ck, jnp.int32(100), cfg, kind="attn", dtype=jnp.float32
+        )
+    )(x, ck)
+    assert "scan" in str(jaxpr)

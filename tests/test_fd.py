@@ -1,0 +1,61 @@
+"""FD coefficient tables: consistency + convergence properties."""
+import numpy as np
+import pytest
+
+from repro.core import fd
+
+
+@pytest.mark.parametrize("order", [2, 4, 6, 8])
+def test_d2_coeffs_annihilate_constants_and_linears(order):
+    offs, coeffs = fd.second_derivative(order)
+    assert abs(sum(coeffs)) < 1e-12                       # f=1 → f''=0
+    assert abs(sum(o * c for o, c in zip(offs, coeffs))) < 1e-12  # f=x → 0
+
+
+@pytest.mark.parametrize("order", [2, 4, 6, 8])
+def test_d2_coeffs_exact_on_quadratic(order):
+    offs, coeffs = fd.second_derivative(order)
+    # f = x² → f'' = 2 exactly for any central scheme of order ≥ 2
+    assert abs(sum((o**2) * c for o, c in zip(offs, coeffs)) - 2.0) < 1e-10
+
+
+@pytest.mark.parametrize("order", [2, 4])
+def test_d1_coeffs(order):
+    offs, coeffs = fd.first_derivative(order)
+    assert abs(sum(coeffs)) < 1e-12
+    assert abs(sum(o * c for o, c in zip(offs, coeffs)) - 1.0) < 1e-12
+
+
+@pytest.mark.parametrize("order", [2, 4, 8])
+def test_convergence_order(order):
+    """Error of d²/dx² sin(x) scales like h^order."""
+    errs = []
+    # keep h large enough that the error stays above the f64 noise floor
+    for h in (0.4, 0.2):
+        offs, coeffs = fd.second_derivative(order, spacing=h)
+        x = 0.7
+        approx = sum(c * np.sin(x + o * h) for o, c in zip(offs, coeffs))
+        errs.append(abs(approx - (-np.sin(x))))
+    rate = np.log2(errs[0] / errs[1])
+    assert rate > order - 0.5, f"observed rate {rate} for order {order}"
+
+
+@pytest.mark.parametrize("ndim", [1, 2, 3])
+@pytest.mark.parametrize("order", [2, 4, 8])
+def test_laplacian_star_shape(ndim, order):
+    star = fd.laplacian_star(ndim, order)
+    r = fd.radius(order)
+    # star points: center + 2r per dim
+    assert len(star) == 1 + 2 * r * ndim
+    assert abs(sum(star.values())) < 1e-10
+    for off in star:
+        assert len(off) == ndim
+        assert sum(1 for o in off if o != 0) <= 1  # star, not box
+        assert all(abs(o) <= r for o in off)
+
+
+def test_unsupported_order_raises():
+    with pytest.raises(ValueError):
+        fd.second_derivative(3)
+    with pytest.raises(ValueError):
+        fd.first_derivative(8)

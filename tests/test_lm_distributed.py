@@ -1,0 +1,23 @@
+"""Distributed LM correctness (subprocess, 8 virtual devices):
+seq-sharded KV caches decode through the shard_map flash-decode path and
+must equal the single-device reference."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+WORKER = os.path.join(os.path.dirname(__file__), "lm_dist_worker.py")
+
+
+@pytest.mark.parametrize(
+    "scenario", ["decode_seq_sharded", "decode_seq_all_sharded"]
+)
+def test_lm_distributed(scenario):
+    proc = subprocess.run(
+        [sys.executable, WORKER, scenario],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, (
+        f"{scenario} failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-3000:]}"
+    )

@@ -1,0 +1,189 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward + one train step on CPU — output shapes and finiteness.
+
+Plus prefill↔decode consistency (the cache path equals the full-sequence
+path) for representative families.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_shape  # noqa: F401
+from repro.configs.base import ModelConfig, reduced_config
+from repro.configs.registry import ARCHS
+from repro.models import lm
+from repro.train import optimizer as opt_mod
+from repro.train.train_step import (
+    TrainOptions,
+    init_train_state,
+    make_train_step,
+)
+
+B, S = 2, 16
+
+
+def _batch(cfg: ModelConfig, seed=0):
+    rng = np.random.default_rng(seed)
+    n_text = S - (cfg.num_modality_tokens if cfg.modality == "vision" else 0)
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(B, n_text)), jnp.int32
+        )
+    }
+    if cfg.modality == "vision":
+        batch["modality"] = jnp.asarray(
+            rng.standard_normal((B, cfg.num_modality_tokens, cfg.modality_dim)),
+            jnp.float32,
+        )
+    elif cfg.modality == "audio":
+        batch["modality"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.modality_dim)), jnp.float32
+        )
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def arch_setup(request):
+    arch = request.param
+    cfg = reduced_config(get_config(arch))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return arch, cfg, params
+
+
+def test_forward_shapes_and_finite(arch_setup):
+    arch, cfg, params = arch_setup
+    batch = _batch(cfg)
+    logits, aux = lm.forward_train(
+        params, cfg, batch["tokens"], batch.get("modality"), q_chunk=8
+    )
+    n_text = batch["tokens"].shape[1]
+    S_total = n_text + (cfg.num_modality_tokens if cfg.modality == "vision" else 0)
+    assert logits.shape[0] == B and logits.shape[1] == S_total
+    assert logits.shape[2] >= cfg.vocab_size
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+def test_train_step_runs_and_is_finite(arch_setup):
+    arch, cfg, params = arch_setup
+    state = init_train_state(jax.random.PRNGKey(1), cfg)
+    step = make_train_step(
+        cfg, opt_mod.OptimizerConfig(), TrainOptions(q_chunk=8)
+    )
+    state2, metrics = jax.jit(step)(state, _batch(cfg))
+    assert bool(jnp.isfinite(metrics["loss"])), f"{arch}: loss not finite"
+    assert int(state2["step"]) == 1
+    # parameters actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), state["params"], state2["params"]
+    )
+    assert max(jax.tree.leaves(moved)) > 0.0
+
+
+def test_loss_decreases_over_steps():
+    """Few steps on a fixed batch: loss must trend down (overfit sanity)."""
+    cfg = reduced_config(get_config("qwen2-7b"))
+    state = init_train_state(jax.random.PRNGKey(2), cfg)
+    step = jax.jit(
+        make_train_step(cfg, opt_mod.OptimizerConfig(peak_lr=1e-2),
+                        TrainOptions(q_chunk=8))
+    )
+    batch = _batch(cfg, seed=3)
+    losses = []
+    for _ in range(8):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen2-7b", "gemma2-27b", "jamba-v0.1-52b", "xlstm-1.3b",
+             "olmoe-1b-7b", "seamless-m4t-large-v2"]
+)
+def test_prefill_decode_consistency(arch):
+    """decode_step(prefill(tokens[:-1]), tokens[-1]) logits ≈ the
+    full-sequence forward's next-token logits — cache path correctness."""
+    import dataclasses
+
+    # fp32 so the cache path can be compared tightly (bf16 near-ties
+    # flip the top token with random-init params)
+    cfg = dataclasses.replace(reduced_config(get_config(arch)), dtype="float32")
+    if cfg.moe is not None:
+        # make routing capacity lossless for the equivalence check
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+        )
+    params = lm.init_params(jax.random.PRNGKey(4), cfg)
+    batch = _batch(cfg, seed=5)
+    tokens = batch["tokens"]
+    modality = batch.get("modality")
+
+    # full forward over S tokens → logits at position S-1 predicts token S
+    logits_full, _ = lm.forward_train(params, cfg, tokens, modality, q_chunk=8)
+    want = logits_full[:, -1]
+
+    # prefill on S-1 tokens, grow the ring capacity, then decode token S-1
+    logits_pre, cache = lm.forward_prefill(
+        params, cfg, tokens[:, :-1], modality, q_chunk=8
+    )
+    S_pre = tokens.shape[1] - 1
+    cache = lm.grow_cache(cfg, cache, S_pre + 1, S_pre)
+    got, _ = lm.decode_step(
+        params, cfg, tokens[:, -1], jnp.int32(tokens.shape[1] - 1), cache
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=2e-3, atol=2e-3,
+    )
+    # and the ranking of the top token agrees
+    assert int(jnp.argmax(got[0])) == int(jnp.argmax(want[0]))
+
+
+def test_param_count_orders_of_magnitude():
+    """Full configs land near their nameplate sizes."""
+    expect = {
+        "yi-9b": (7e9, 11e9),
+        "qwen2-7b": (6e9, 9e9),
+        "gemma2-27b": (21e9, 30e9),
+        # our FFN is uniformly SwiGLU (3 mats); starcoder2's nameplate
+        # assumes a 2-mat GELU MLP, so our instantiation lands ~10B
+        "starcoder2-7b": (6e9, 11e9),
+        "jamba-v0.1-52b": (45e9, 60e9),
+        "olmoe-1b-7b": (5e9, 9e9),
+        # our mLSTM block carries 4 full-width projections at 2× expansion
+        # (simplified vs the paper's factored q/k heads) → ~2.1B
+        "xlstm-1.3b": (0.9e9, 2.3e9),
+        "internvl2-2b": (1.5e9, 3e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]B"
+
+
+def test_moe_active_params_below_total():
+    for arch in ("olmoe-1b-7b", "granite-moe-1b-a400m", "jamba-v0.1-52b"):
+        cfg = get_config(arch)
+        assert cfg.active_param_count() < cfg.param_count()
+
+
+def test_gemma2_alternates_local_global():
+    cfg = get_config("gemma2-27b")
+    kinds = {cfg.layer_kind(i) for i in range(4)}
+    assert kinds == {"attn", "attn_local"}
+    assert cfg.local_window > 0
+
+
+def test_jamba_attention_ratio():
+    """jamba: 1 attention : 7 mamba per supercell of 8."""
+    cfg = get_config("jamba-v0.1-52b")
+    cell = cfg.block_pattern
+    assert len(cell) == 8
+    assert sum(1 for k in cell if k == "attn") == 1
+    assert sum(1 for k in cell if k == "mamba") == 7
+
+
+def test_xlstm_mixes_block_kinds():
+    cfg = get_config("xlstm-1.3b")
+    assert "slstm" in cfg.block_pattern and "mlstm" in cfg.block_pattern
+    assert cfg.d_ff == 0  # pre-up-projection blocks, no transformer FFN

@@ -1,0 +1,249 @@
+"""Substrate tests: optimizer, checkpoint (incl. crash-consistency and
+elastic restore), data pipeline, sharding rules, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import DataConfig, PrefetchLoader, make_source
+from repro.dist.compression import int8_roundtrip, topk_sparsify
+from repro.train import optimizer as opt_mod
+
+
+# -------------------------------------------------------------------------
+# optimizer
+# -------------------------------------------------------------------------
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = opt_mod.OptimizerConfig(peak_lr=0.1, warmup_steps=0, weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt_mod.init_opt_state(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}  # d/dw |w|²
+        params, state, _ = opt_mod.adamw_update(cfg, grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    cfg = opt_mod.OptimizerConfig(peak_lr=1.0, warmup_steps=0, grad_clip_norm=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt_mod.init_opt_state(params)
+    huge = {"w": jnp.full(4, 1e6)}
+    _, _, metrics = opt_mod.adamw_update(cfg, huge, state, params)
+    assert float(metrics["grad_norm"]) > 1.0  # pre-clip norm reported
+
+
+def test_schedule_warmup_and_decay():
+    cfg = opt_mod.OptimizerConfig(peak_lr=1e-3, warmup_steps=100, decay_steps=1000)
+    lr0 = float(opt_mod.schedule(cfg, jnp.int32(0)))
+    lr_peak = float(opt_mod.schedule(cfg, jnp.int32(100)))
+    lr_end = float(opt_mod.schedule(cfg, jnp.int32(999)))
+    assert lr0 < lr_peak
+    assert abs(lr_peak - 1e-3) / 1e-3 < 0.05
+    assert lr_end < lr_peak
+    assert lr_end >= cfg.peak_lr * cfg.min_lr_ratio * 0.9
+
+
+def test_weight_decay_skips_norms_and_biases():
+    assert opt_mod._decay_mask(("cells", "slot0", "attn", "wq")) is True
+    assert opt_mod._decay_mask(("cells", "slot0", "norm_mixer")) is False
+
+
+# -------------------------------------------------------------------------
+# checkpoint
+# -------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+                   "b": jnp.asarray(rng.standard_normal(8), jnp.float32)},
+        "step": jnp.int32(7),
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ck.save(3, tree, blocking=True)
+    got = ck.restore(jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_then_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1))           # async
+    ck.wait()
+    assert ck.available_steps() == [1]
+
+
+def test_checkpoint_keeps_latest_k(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s), blocking=True)
+    assert ck.available_steps() == [3, 4]
+
+
+def test_checkpoint_uncommitted_is_invisible(tmp_path):
+    """A partially-written checkpoint (no COMMITTED marker) is skipped —
+    crash consistency for preempted writers."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _tree(), blocking=True)
+    # simulate a torn write at a later step
+    torn = os.path.join(str(tmp_path), "step_00000009")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "manifest.json"), "w") as f:
+        f.write("{}")
+    assert ck.latest_step() == 5
+    got = ck.restore(jax.tree.map(jnp.zeros_like, _tree()))
+    assert int(got["step"]) == 7
+
+
+def test_checkpoint_restore_specific_step(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+    ck.save(1, _tree(1), blocking=True)
+    ck.save(2, _tree(2), blocking=True)
+    got1 = ck.restore(jax.tree.map(jnp.zeros_like, _tree()), step=1)
+    want1 = _tree(1)
+    np.testing.assert_array_equal(
+        np.asarray(got1["params"]["w"]), np.asarray(want1["params"]["w"])
+    )
+
+
+def test_checkpoint_elastic_resharding(tmp_path):
+    """Restore with explicit shardings — the elastic-scale path (write on
+    mesh A, restore to mesh B = here, 1-device mesh with new layout)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ck.save(1, tree, blocking=True)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sh = {
+        "params": {
+            "w": NamedSharding(mesh, P("data", None)),
+            "b": NamedSharding(mesh, P()),
+        },
+        "step": NamedSharding(mesh, P()),
+    }
+    got = ck.restore(jax.tree.map(jnp.zeros_like, tree), shardings=sh)
+    assert got["params"]["w"].sharding == sh["params"]["w"]
+    np.testing.assert_array_equal(
+        np.asarray(got["params"]["w"]), np.asarray(tree["params"]["w"])
+    )
+
+
+# -------------------------------------------------------------------------
+# data pipeline
+# -------------------------------------------------------------------------
+
+
+def test_synthetic_batches_deterministic():
+    cfg = DataConfig(seq_len=16, global_batch=4, vocab_size=100, seed=1)
+    src = make_source(cfg)
+    b1, b2 = src.batch_at(3), src.batch_at(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = src.batch_at(4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    assert b1["tokens"].shape == (4, 16)
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 100
+
+
+def test_file_tokens_windows(tmp_path):
+    path = str(tmp_path / "toks.bin")
+    data = np.arange(160, dtype=np.uint32)
+    data.tofile(path)
+    cfg = DataConfig(seq_len=16, global_batch=2, vocab_size=1 << 20, path=path)
+    src = make_source(cfg)
+    b = src.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][0], np.arange(16))
+    np.testing.assert_array_equal(b["tokens"][1], np.arange(16, 32))
+    # wraps around at the end of the file
+    b_last = src.batch_at(5)
+    assert b_last["tokens"].shape == (2, 16)
+
+
+def test_prefetch_loader_orders_steps():
+    cfg = DataConfig(seq_len=8, global_batch=2, vocab_size=50)
+    loader = PrefetchLoader(make_source(cfg), start_step=10, depth=2)
+    it = iter(loader)
+    steps = [next(it)[0] for _ in range(4)]
+    loader.stop()
+    assert steps == [10, 11, 12, 13]
+
+
+def test_modality_batches():
+    cfg = DataConfig(
+        seq_len=16, global_batch=2, vocab_size=50, modality_tokens=4, modality_dim=8
+    )
+    b = make_source(cfg).batch_at(0)
+    assert b["tokens"].shape == (2, 12)  # text shortened by vision tokens
+    assert b["modality"].shape == (2, 4, 8)
+
+
+# -------------------------------------------------------------------------
+# gradient compression (beyond-paper distributed-optimization hook)
+# -------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), scale=st.floats(1e-3, 1e3))
+def test_int8_roundtrip_error_bounded(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((32, 16)) * scale, jnp.float32)
+    y = int8_roundtrip({"g": x})["g"]
+    err = float(jnp.abs(y - x).max())
+    assert err <= float(jnp.abs(x).max()) / 127 * 1.01 + 1e-9
+
+
+def test_topk_sparsify_keeps_largest():
+    x = jnp.asarray(np.arange(100, dtype=np.float32))
+    y = topk_sparsify({"g": x}, keep_fraction=0.1)["g"]
+    assert int((y != 0).sum()) == 10
+    assert float(y[-1]) == 99.0 and float(y[0]) == 0.0
+
+
+# -------------------------------------------------------------------------
+# sharding rules
+# -------------------------------------------------------------------------
+
+
+def test_valid_spec_drops_indivisible_axes():
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.dist.sharding import _valid_spec
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    # shape 3 not divisible by axis size 1? (1 divides everything) — use a
+    # pure logic check: indivisible entries are dropped
+    spec = _valid_spec(mesh, P("data", "model"), (4, 4))
+    assert spec == P("data", "model")
+
+
+def test_param_specs_cover_tree():
+    """Every parameter leaf of a real model gets a valid PartitionSpec."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.configs.base import reduced_config
+    from repro.dist import param_specs as pspecs
+    from repro.dist.sharding import default_rules
+    from repro.models import lm
+
+    cfg = reduced_config(get_config("olmoe-1b-7b"))
+    shapes = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    specs = pspecs.param_pspecs(shapes, default_rules(), mesh)
+    n = 0
+    for leaf, spec in zip(jax.tree.leaves(shapes), jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))):
+        assert isinstance(spec, P)
+        n += 1
+    assert n > 10
