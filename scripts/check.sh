@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# Repo check: fast import smoke over every module, then tier-1 tests.
+#
+#   scripts/check.sh            # smoke + full tier-1 suite
+#   scripts/check.sh --smoke    # smoke only (seconds; used by CI's first job)
+#
+# Works both with an editable install (pip install -e .) and without
+# (falls back to PYTHONPATH=src).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! python -c "import repro" >/dev/null 2>&1; then
+  export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+fi
+
+echo "== import smoke: src/repro/** =="
+python - <<'EOF'
+import importlib
+import pathlib
+import sys
+
+failed = []
+root = pathlib.Path("src")
+mods = sorted(
+    str(p.relative_to(root).with_suffix("")).replace("/", ".")
+    for p in root.glob("repro/**/*.py")
+)
+for mod in mods:
+    name = mod[: -len(".__init__")] if mod.endswith(".__init__") else mod
+    try:
+        importlib.import_module(name)
+    except Exception as e:  # noqa: BLE001 - report every failure
+        failed.append((name, f"{type(e).__name__}: {e}"))
+for name, err in failed:
+    print(f"FAIL  {name}: {err}")
+print(f"{len(mods) - len(failed)}/{len(mods)} modules import cleanly")
+sys.exit(1 if failed else 0)
+EOF
+
+echo "== import smoke: benchmarks/*.py =="
+python - <<'EOF'
+import importlib.util
+import pathlib
+import sys
+
+failed = []
+files = sorted(pathlib.Path("benchmarks").glob("*.py"))
+for path in files:
+    spec = importlib.util.spec_from_file_location(f"bench_{path.stem}", path)
+    try:
+        spec.loader.exec_module(importlib.util.module_from_spec(spec))
+    except Exception as e:  # noqa: BLE001
+        failed.append((str(path), f"{type(e).__name__}: {e}"))
+for name, err in failed:
+    print(f"FAIL  {name}: {err}")
+print(f"{len(files) - len(failed)}/{len(files)} benchmark modules import cleanly")
+sys.exit(1 if failed else 0)
+EOF
+
+if [[ "${1:-}" == "--smoke" ]]; then
+  echo "smoke only: skipping tier-1 tests"
+  exit 0
+fi
+
+echo "== tier-1 tests =="
+python -m pytest -x -q

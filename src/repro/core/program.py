@@ -131,7 +131,9 @@ class StencilComputation:
         out_specs = tuple(
             specs[self.field_args.index(f)] for f in _stored_fields(self.func, self.field_args)
         )
-        sharded = jax.shard_map(
+        from repro.dist.sharding import shard_map  # version-portable
+
+        sharded = shard_map(
             interp,
             mesh=mesh,
             in_specs=tuple(specs),

@@ -1,0 +1,61 @@
+"""Gradient compressors — the bandwidth lever for DCN-bound meshes.
+
+Multi-pod training all-reduces gradients over DCN, which is an order of
+magnitude slower than ICI; these compressors trade precision for wire
+bytes on that hop.  Both operate leaf-wise on arbitrary pytrees and are
+pure (roundtrip in one step) so they compose with ``lax.scan``-based
+microbatching and stay pjit-able.
+
+- ``int8_roundtrip``  — symmetric per-leaf int8 quantization; worst-case
+  error ≤ max|x| / 127 (one quantization step), 4× fewer bytes than f32.
+- ``topk_sparsify``   — magnitude top-k masking; keeps the largest
+  ``keep_fraction`` of entries per leaf and zeroes the rest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _int8_leaf(x):
+    if not jnp.issubdtype(x.dtype, jnp.floating) or x.ndim == 0:
+        return x
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    # all-zero leaf: keep scale finite so dequantization returns zeros
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int8)
+    return (q.astype(x.dtype) * safe).astype(x.dtype)
+
+
+def int8_roundtrip(tree):
+    """Quantize every floating leaf to int8 and back (symmetric, per-leaf
+    scale).  |out - in| ≤ max|in| / 127 · (1/2 rounding + clip slack)."""
+    return jax.tree.map(_int8_leaf, tree)
+
+
+def _topk_leaf(x, keep_fraction: float):
+    if not jnp.issubdtype(x.dtype, jnp.floating) or x.ndim == 0:
+        return x
+    n = x.size
+    k = max(1, int(n * keep_fraction))
+    flat = x.reshape(-1)
+    if k >= n:
+        return x
+    # threshold at the k-th largest magnitude: everything strictly above
+    # it is kept unconditionally; ties AT the threshold are broken by
+    # index so exactly k entries survive (tie-breaking must not touch
+    # the strictly-above set, or a sparse leaf with thresh == 0 would
+    # zero its actual nonzeros)
+    mag = jnp.abs(flat)
+    thresh = jax.lax.top_k(mag, k)[0][-1]
+    above = mag > thresh
+    ties = mag == thresh
+    budget = k - above.sum()
+    keep_ties = ties & (jnp.cumsum(ties.astype(jnp.int32)) <= budget)
+    return jnp.where(above | keep_ties, flat, 0).reshape(x.shape)
+
+
+def topk_sparsify(tree, keep_fraction: float = 0.01):
+    """Zero all but the top ``keep_fraction`` entries (by magnitude) of
+    every floating leaf."""
+    return jax.tree.map(lambda x: _topk_leaf(x, keep_fraction), tree)

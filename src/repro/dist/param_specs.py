@@ -1,0 +1,188 @@
+"""PartitionSpec assignment for parameter / train-state trees.
+
+The model-layer analogue of the stencil stack's decomposition pass
+(``core/passes/decompose.py``): given the declarative mapping
+(``ShardingRules``) and the topology (``Mesh``), walk the tree and emit a
+concrete layout per leaf.  Leaves are classified by their tree path —
+every parameter name in ``models/*.py`` appears in the table below — and
+unknown leaves replicate, so new blocks degrade gracefully instead of
+failing to launch.
+
+All specs pass through ``_valid_spec``: an axis that does not divide a
+dimension (e.g. 2 KV heads on a 16-way model axis) is dropped, never an
+error — the launch layer decides layouts per (arch × shape) cell, and
+the same table must serve all of them.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.sharding import ShardingRules, _valid_spec
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    """Tree path → tuple of plain string names (dict keys, attr names,
+    sequence indices)."""
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def _logical_axes(names: Tuple[str, ...], ndim: int) -> tuple:
+    """Logical axis names (resolved through the rules table) per dim of
+    the parameter leaf at tree path ``names``.
+
+    Stacked leaves (``cells/slotN/...`` carry a leading supercell dim,
+    ``encoder/layers/...`` a leading layer dim) are handled by the
+    caller, which strips the stack dim before lookup.
+    """
+    last = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+
+    if ndim <= 1:
+        return (None,) * ndim
+
+    # embedding / unembedding: [Vpad, D] — vocab rows over "model"
+    if last in ("embed", "unembed"):
+        return ("vocab", None)
+
+    if parent in ("attn", "cross"):
+        table = {
+            "wq": ("embed", "q_heads_p", None),
+            "wk": ("embed", "kv_heads_p", None),
+            "wv": ("embed", "kv_heads_p", None),
+            "wo": ("q_heads_p", None, "embed"),
+            "bq": ("q_heads_p", None),
+            "bk": ("kv_heads_p", None),
+            "bv": ("kv_heads_p", None),
+        }
+        if last in table:
+            return table[last]
+
+    if parent == "moe":
+        # expert weights are EP-resident over the expert dim — matching
+        # moe_apply's shard_map in_specs P("model", None, None).  "mlp"
+        # would collide with "expert" (both map to "model"); _valid_spec
+        # keeps the first use of an axis, so expert wins as intended.
+        table = {
+            "router": (None, None),
+            "wi": ("expert", None, "mlp"),
+            "wu": ("expert", None, "mlp"),
+            "wo": ("expert", "mlp", None),
+        }
+        if last in table:
+            return table[last]
+
+    if parent == "ffn":
+        table = {
+            "wi": ("embed", "mlp"),
+            "wu": ("embed", "mlp"),
+            "wo": ("mlp", "embed"),
+        }
+        if last in table:
+            return table[last]
+
+    if parent == "mamba":
+        table = {
+            "in_proj": ("embed", "mlp"),
+            "out_proj": ("mlp", "embed"),
+            "conv_w": (None, "mlp"),
+            "dt_proj": ("embed", None),
+            "B_proj": ("embed", None),
+            "C_proj": ("embed", None),
+        }
+        if last in table:
+            return table[last]
+
+    if parent == "mlstm":
+        # TP layout (models/xlstm.py): only hd_v is shardable — v/z
+        # projections sharded on their last dim, down_proj row-parallel,
+        # q/k/gates replicated.
+        table = {
+            "up_x": ("embed", None),
+            "up_z": ("embed", None, "mlp"),
+            "wv": (None, None, "mlp"),
+            "down_proj": (None, "mlp", "embed"),
+        }
+        if last in table:
+            return table[last]
+        return (None,) * ndim
+
+    if parent == "slstm":
+        table = {
+            "w_gates": ("embed", None, "heads", None),
+            "r_gates": (None, "heads", None, None),
+            "b_gates": (None, "heads", None),
+            "up1": ("embed", "mlp"),
+            "up2": ("embed", "mlp"),
+            "down": ("mlp", "embed"),
+        }
+        if last in table:
+            return table[last]
+
+    if parent == "projector":
+        return ("embed", None) if ndim == 2 else (None,) * ndim
+
+    return (None,) * ndim
+
+
+# Leaves stacked over supercells / encoder layers carry one extra leading
+# dim that the logical table does not know about.
+_STACKED_ROOTS = ("cells", "layers")
+
+
+def _leaf_spec(names: Tuple[str, ...], shape: tuple,
+               rules: ShardingRules, mesh: Mesh) -> P:
+    stacked = any(r in names for r in _STACKED_ROOTS)
+    ndim = len(shape) - (1 if stacked else 0)
+    logical = _logical_axes(names, ndim)
+    if stacked:
+        logical = (None,) + tuple(logical)
+    entries = tuple(
+        rules.physical(a) if isinstance(a, str) else a for a in logical
+    )
+    return _valid_spec(mesh, P(*entries), tuple(shape))
+
+
+def param_pspecs(shapes, rules: ShardingRules, mesh: Mesh):
+    """PartitionSpec tree matching a parameter-shape tree.
+
+    ``shapes`` is the pytree from ``jax.eval_shape(lm.init_params, ...)``
+    (or the params themselves); every leaf gets a valid spec.
+    """
+    def one(path, leaf):
+        return _leaf_spec(_path_names(path), tuple(leaf.shape), rules, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+# prefixes stripped so optimizer moments inherit their parameter's spec
+_STATE_WRAPPERS = ("params", "opt_state", "m", "v", "mu", "nu")
+
+
+def state_pspecs(state_shapes, rules: ShardingRules, mesh: Mesh):
+    """Specs for a full train state ``{params, opt_state{m,v,count}, step}``.
+
+    AdamW moments mirror their parameter's layout (ZeRO-1 falls out of
+    the parameter shardings for free); scalar counters replicate.
+    """
+    def one(path, leaf):
+        names = _path_names(path)
+        while names and names[0] in _STATE_WRAPPERS:
+            names = names[1:]
+        if not names or len(leaf.shape) == 0:
+            return P()
+        return _leaf_spec(names, tuple(leaf.shape), rules, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, state_shapes)

@@ -124,12 +124,17 @@ def build_apply_kernel(
                 i * t + b for i, t, b in zip(ids, tile, _base)
             )
 
-        in_specs.append(
-            pl.BlockSpec(
-                tuple(pl.Element(w) for w in window),
-                index_map,
+        # overlapping element-indexed windows: newer jax spells this
+        # pl.Element block dims, older jax an Unblocked indexing mode
+        if hasattr(pl, "Element"):
+            spec = pl.BlockSpec(
+                tuple(pl.Element(w) for w in window), index_map
             )
-        )
+        else:
+            spec = pl.BlockSpec(
+                window, index_map, indexing_mode=pl.unblocked
+            )
+        in_specs.append(spec)
         window_origins.append(tuple(lo))
 
     out_specs = [

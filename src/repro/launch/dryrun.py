@@ -109,6 +109,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
         "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
     }
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+        cost = cost[0] if cost else {}
     record["cost"] = {
         "flops": cost.get("flops"),
         "bytes_accessed": cost.get("bytes accessed"),
@@ -167,6 +169,8 @@ def run_cell_delta(arch: str, shape_name: str, multi_pod: bool, outdir: str) -> 
             lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
         compiled = lowered.compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         return {
             "flops": cost.get("flops") or 0.0,
             "bytes_accessed": cost.get("bytes accessed") or 0.0,

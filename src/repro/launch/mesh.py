@@ -9,19 +9,25 @@ from __future__ import annotations
 import jax
 
 
+def _make(shape, axes):
+    # newer jax takes axis_types (Auto = sharding propagation decides);
+    # older jax has no AxisType and make_mesh defaults to the same
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            tuple(shape),
+            tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (16, 16) = 256 chips, axes (data, model).
     Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make(shape, axes)
 
 
 def make_mesh(shape, axes):
-    return jax.make_mesh(
-        tuple(shape),
-        tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _make(shape, axes)

@@ -1,0 +1,35 @@
+"""Context-parallelism correctness (subprocess, 8 virtual devices):
+the sequence-halo exchange of ``repro.dist.context_parallel`` — routed
+through the shared ``dmp``/``comm`` stencil machinery — must equal the
+single-device reference bitwise (and the comm-dialect route must be the
+one actually taken)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+WORKER = os.path.join(os.path.dirname(__file__), "cp_worker.py")
+
+SCENARIOS = [
+    "exchange-zero",
+    "exchange-periodic",
+    "conv",
+    "window-attention",
+    "window-vs-dense",
+    "comm-ir",
+]
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_context_parallel_equivalence(scenario):
+    proc = subprocess.run(
+        [sys.executable, WORKER, scenario],
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, (
+        f"scenario {scenario} failed:\nSTDOUT:\n{proc.stdout}\n"
+        f"STDERR:\n{proc.stderr[-3000:]}"
+    )
