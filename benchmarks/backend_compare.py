@@ -25,7 +25,11 @@ def _hlo_op_count(fn, *args) -> int:
     )
 
 
-def run(fast: bool = False) -> dict:
+def run(fast: bool = False, overlap: str = "off") -> dict:
+    """``overlap="on"`` adds a variant compiled through the IR-level
+    ``split_overlapped_applies`` path (interior/frame split + combine),
+    so the rewrite's overhead/win is measurable against ``jnp_opt`` on
+    the same hardware."""
     shape = (256, 256) if fast else (1024, 1024)
     g = Grid(shape=shape, extent=(1.0, 1.0))
     u = TimeFunction(name="u", grid=g, space_order=8)
@@ -37,6 +41,10 @@ def run(fast: bool = False) -> dict:
         "jnp_opt": CompileOptions(backend="jnp", fuse=True, cse=True),
         "pallas_interpret": CompileOptions(backend="pallas"),
     }
+    if overlap == "on":
+        variants["jnp_opt_overlap"] = CompileOptions(
+            backend="jnp", fuse=True, cse=True, overlap=True
+        )
     record, rows = {}, []
     ref_out = None
     for name, opts in variants.items():
@@ -57,4 +65,10 @@ def run(fast: bool = False) -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--overlap", choices=["on", "off"], default="off")
+    a = ap.parse_args()
+    run(fast=a.fast, overlap=a.overlap)

@@ -44,6 +44,8 @@ def main() -> None:
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     n_permute = len(re.findall(r"collective-permute", hlo))
     print(f"mesh: 8x8x8 = {mesh.size} devices; grid {shape} so8 wave")
@@ -54,14 +56,31 @@ def main() -> None:
           f"bytes {cost.get('bytes accessed', 0):.3e}")
     print(f"collective-permute ops in HLO: {n_permute} "
           "(halo exchanges, 3 axes x 2 dirs x radius batches)")
+    # the canonical comm-level IR: overlap is visible as starts → interior
+    # apply → wait → frame applies (pipeline: comp.last_pipeline)
     local = comp.last_local
-    from repro.core.dialects import dmp
+    from repro.core.dialects import comm
 
-    swaps = [o for o in local.body.ops if isinstance(o, dmp.SwapOp)]
-    halo_bytes = sum(s.total_exchange_elems() for s in swaps) * 4
-    print(f"dmp model: {len(swaps)} swap(s), "
+    print(f"pipeline: {comp.last_pipeline}")
+    print("comm IR : " + " -> ".join(_rle(o.name for o in local.body.ops)))
+    starts = [o for o in local.body.ops
+              if isinstance(o, comm.ExchangeStartOp)]
+    halo_bytes = sum(int(np.prod(s.size)) for s in starts) * 4
+    print(f"comm model: {len(starts)} exchange_start(s), "
           f"{halo_bytes/2**20:.2f} MiB halo/rank/step "
           f"-> {halo_bytes/50e9*1e6:.0f} µs on 50 GB/s ICI")
+
+
+def _rle(names):
+    """['a','a','b'] → ['a x2', 'b'] — compact op-sequence printing."""
+    out: list = []
+    for n in names:
+        short = n.split(".", 1)[-1]
+        if out and out[-1][0] == short:
+            out[-1][1] += 1
+        else:
+            out.append([short, 1])
+    return [f"{n} x{c}" if c > 1 else n for n, c in out]
 
 
 if __name__ == "__main__":

@@ -57,6 +57,13 @@ print(f"{len(files) - len(failed)}/{len(files)} benchmark modules import cleanly
 sys.exit(1 if failed else 0)
 EOF
 
+echo "== pass-pipeline smoke =="
+python -m repro.core.passes \
+  "fuse,cse,dce,decompose{grid=2x2},swap-elim,overlap,lower-comm" --quiet
+python -m repro.core.passes \
+  "decompose{grid=2x2xy,boundary=periodic},swap-elim,diagonal,overlap,lower-comm" \
+  --program box --quiet
+
 if [[ "${1:-}" == "--smoke" ]]; then
   echo "smoke only: skipping tier-1 tests"
   exit 0

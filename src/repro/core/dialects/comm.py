@@ -21,11 +21,92 @@ exposes (allreduce, broadcast) for use by drivers (e.g. residual norms).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Sequence
 
 from repro.core.ir import Attribute, Operation, SSAValue, TypeAttribute, VerificationError
 from repro.core.dialects.stencil import Bounds, TempType
+
+
+def permute_pairs(
+    axis_shifts: Sequence[tuple],
+    axis_sizes: dict,
+    periodic: bool,
+) -> tuple:
+    """Linearized ``lax.ppermute`` (source, dest) pairs for one exchange.
+
+    ``axis_shifts`` is ``((axis_name, step), ...)`` — the relative offset of
+    the rank the data comes *from*: receiver ``me`` takes data from rank
+    ``me + step`` ⇒ sender ``r`` delivers to ``r - step``.  Multi-axis
+    shifts linearize row-major over the tuple of mesh axes (diagonal
+    exchanges).  Non-periodic out-of-grid destinations are dropped, so
+    physical-edge ranks simply receive nothing.
+
+    Returns ``(axis_arg, pairs)`` ready for ``lax.ppermute`` — the single
+    shared pair construction used by every exchange execution path
+    (stencil interpreter and ``repro.dist.context_parallel``).
+    """
+    names = tuple(a for a, _ in axis_shifts)
+    steps = [s for _, s in axis_shifts]
+    sizes = [axis_sizes[n] for n in names]
+    pairs: list[tuple[int, int]] = []
+    for lin in range(math.prod(sizes)):
+        rem, coords = lin, []
+        for sz in reversed(sizes):
+            coords.append(rem % sz)
+            rem //= sz
+        coords = coords[::-1]
+        dst = [c - s for c, s in zip(coords, steps)]
+        if periodic:
+            dst = [d % sz for d, sz in zip(dst, sizes)]
+        elif any(d < 0 or d >= sz for d, sz in zip(dst, sizes)):
+            continue
+        lin_dst = 0
+        for d, sz in zip(dst, sizes):
+            lin_dst = lin_dst * sz + d
+        pairs.append((lin, lin_dst))
+    axis_arg = names[0] if len(names) == 1 else names
+    return axis_arg, pairs
+
+
+class HaloPadOp(Operation):
+    """``%padded = comm.halo_pad %core`` — boundary-condition fill of the
+    halo frame (zeros, or a local wrap for periodic undecomposed dims);
+    decomposed-dim halos are filled by the exchanges that follow."""
+
+    name = "comm.halo_pad"
+
+    def __init__(
+        self,
+        temp: SSAValue,
+        result_bounds: Bounds,
+        boundary: str,
+        grid,  # dmp.GridAttr
+    ) -> None:
+        from repro.core.ir import StringAttr
+
+        assert isinstance(temp.type, TempType)
+        super().__init__(
+            operands=[temp],
+            result_types=[TempType(result_bounds, temp.type.element_type)],
+            attributes={"boundary": StringAttr(boundary), "grid": grid},
+        )
+
+    @property
+    def temp(self) -> SSAValue:
+        return self.operands[0]
+
+    @property
+    def boundary(self) -> str:
+        return self.attributes["boundary"].value  # type: ignore[attr-defined]
+
+    def verify_(self) -> None:
+        if not self.results[0].type.bounds.contains(self.temp.type.bounds):
+            raise VerificationError(
+                f"comm.halo_pad result bounds {self.results[0].type.bounds} "
+                f"must contain input bounds {self.temp.type.bounds}"
+            )
 
 
 @dataclass(frozen=True)

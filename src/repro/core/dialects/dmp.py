@@ -192,6 +192,22 @@ class SwapOp(Operation):
     def total_exchange_elems(self) -> int:
         return sum(e.numel() for e in self.exchanges)
 
+    def rounds(self) -> list:
+        """Group exchanges into dependency rounds.
+
+        Sequential: one round per grid axis, in sweep order (later rounds
+        read halos written by earlier ones — corner forwarding).
+        Concurrent: all exchanges in one independent round.
+        """
+        if self.schedule == "concurrent":
+            return [list(self.exchanges)]
+        by_axis: dict[int, list[ExchangeDecl]] = {}
+        for e in self.exchanges:
+            active = [g for g, s in enumerate(e.neighbor) if s != 0]
+            assert len(active) == 1, "sequential schedule expects face exchanges"
+            by_axis.setdefault(active[0], []).append(e)
+        return [by_axis[g] for g in sorted(by_axis)]
+
     def verify_(self) -> None:
         ib: Bounds = self.temp.type.bounds
         ob: Bounds = self.result_bounds

@@ -261,6 +261,46 @@ class ApplyOp(Operation):
                 )
 
 
+class CombineOp(Operation):
+    """``%out = stencil.combine %part…`` — assemble disjoint sub-domain
+    temps into one temp covering ``result_bounds``.
+
+    Emitted by ``split_overlapped_applies``: the interior apply and the
+    boundary-frame applies each produce a rectangle of the original apply's
+    domain; combine reassembles them (MLIR's ``stencil.combine``, N-ary).
+    Points not covered by any part are zero.
+    """
+
+    name = "stencil.combine"
+
+    def __init__(
+        self,
+        parts: Sequence[SSAValue],
+        result_bounds: Bounds,
+        element_type: ScalarType = f32,
+    ) -> None:
+        assert parts, "stencil.combine needs at least one part"
+        for p in parts:
+            assert isinstance(p.type, TempType)
+        super().__init__(
+            operands=list(parts),
+            result_types=[TempType(result_bounds, element_type)],
+        )
+
+    @property
+    def result_bounds(self) -> Bounds:
+        return self.results[0].type.bounds
+
+    def verify_(self) -> None:
+        rb = self.result_bounds
+        for p in self.operands:
+            if not rb.contains(p.type.bounds):
+                raise VerificationError(
+                    f"stencil.combine part {p.type.bounds} outside result "
+                    f"bounds {rb}"
+                )
+
+
 class AccessOp(Operation):
     """``%v = stencil.access %t [offset]`` — read a temp at a relative offset."""
 

@@ -1,33 +1,39 @@
-"""Lowering the stencil+dmp IR to executable JAX (paper secs. 4.3 & 5).
+"""Executing the comm-level IR as JAX (paper secs. 4.3 & 5).
 
 The paper lowers ``stencil`` → ``dmp`` → ``mpi`` → LLVM calls.  Here the
-final target is XLA: the rank-local function is *interpreted into a JAX
-trace* (every IR op becomes jnp/lax primitives), the exchanges become
-``lax.ppermute`` inside ``jax.shard_map``, and XLA compiles the result.
-Two compute backends share the interpreter's body evaluator:
+final target is XLA: the rank-local function — **after** the canonical
+dmp→comm lowering (``core/passes/lower_comm.py``), so it contains comm
+ops, never ``dmp.swap`` — is *interpreted into a JAX trace* (every IR op
+becomes jnp/lax primitives), the exchanges become ``lax.ppermute`` inside
+``jax.shard_map``, and XLA compiles the result.  Two compute backends
+share the interpreter's body evaluator:
 
 - ``jnp``    — shifted ``lax.slice`` reads, fused by XLA (the reference);
 - ``pallas`` — each ``stencil.apply`` is code-generated into a Pallas TPU
   kernel with explicit BlockSpec VMEM tiling (``repro.kernels``), the TPU
   analogue of the paper's GPU/FPGA backends.
 
-Halo-exchange execution model (DESIGN.md §2): ``dmp.swap`` becomes
-  1. a *boundary-condition pad* (zeros, or wrap for periodic dims that are
-     not decomposed),
-  2. per-round ``ppermute`` *starts* — one per ExchangeDecl — each sending
-     the decl's send-rectangle to the declared neighbour, and
-  3. *waits* that insert received patches (``lax.dynamic_update_slice``).
-Sequential schedules chain rounds through dataflow (corner forwarding);
-concurrent schedules issue every permute independently.  Swaps tagged by
-the overlap pass defer their waits until the consumer's *interior* has
-been computed, so the collective rides under the interior compute.
+Halo-exchange execution model (DESIGN.md §2) — one op-dispatch level,
+one path:
+
+- ``comm.halo_pad``       → boundary-condition pad (zeros, or wrap for
+                            periodic dims that are not decomposed);
+- ``comm.exchange_start`` → extract the send rectangle, ``lax.ppermute``
+                            it toward ``-shift`` (pairs built by the
+                            shared ``comm.permute_pairs``);
+- ``comm.wait``           → insert received patches
+                            (``lax.dynamic_update_slice``);
+- ``stencil.combine``     → reassemble split (overlapped) applies.
+
+Comm/compute overlap is *not* a runtime special case: the
+``split_overlapped_applies`` pass expresses it in the IR, and the
+interpreter just executes what it sees.  Grid axes of size 1 run a local
+emulation (self-exchange for periodic wrap, no-op for zero BC), so the
+single-device reference path runs the same comm-level program unchanged.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +41,9 @@ from jax import lax
 
 from repro.core import ir
 from repro.core.dialects import comm, dmp, stencil
-from repro.core.passes.overlap import overlap_enabled
+
+# Backwards-compatible re-export: the lowering pass moved to core/passes.
+from repro.core.passes.lower_comm import lower_dmp_to_comm  # noqa: F401
 
 # --------------------------------------------------------------------------
 # Shared point-function evaluator
@@ -105,46 +113,8 @@ def eval_apply_body(
 
 
 # --------------------------------------------------------------------------
-# Exchange execution (dmp.swap / comm ops → pad + ppermute + insert)
+# Boundary-condition fill
 # --------------------------------------------------------------------------
-
-
-def _perm_for(
-    neighbor: tuple,
-    grid: dmp.GridAttr,
-    axis_sizes: dict[str, int],
-    periodic: bool,
-) -> tuple[tuple[str, ...], list[tuple[int, int]]]:
-    """ppermute permutation for one ExchangeDecl.
-
-    Receiver ``me`` takes data from rank ``me + neighbor`` ⇒ sender ``r``
-    delivers to ``r - neighbor``.  Multi-axis neighbours use a linearized
-    permutation over the tuple of mesh axes (diagonal exchanges).
-    """
-    active = [(g, step) for g, step in enumerate(neighbor) if step != 0]
-    names = tuple(grid.axis_names[g] for g, _ in active)
-    sizes = [axis_sizes[n] for n in names]
-    steps = [s for _, s in active]
-    total = math.prod(sizes)
-    pairs: list[tuple[int, int]] = []
-    for lin in range(total):
-        # unflatten row-major
-        rem, coords = lin, []
-        for sz in reversed(sizes):
-            coords.append(rem % sz)
-            rem //= sz
-        coords = coords[::-1]
-        dst = [c - s for c, s in zip(coords, steps)]
-        if periodic:
-            dst = [d % sz for d, sz in zip(dst, sizes)]
-        elif any(d < 0 or d >= sz for d, sz in zip(dst, sizes)):
-            continue
-        lin_dst = 0
-        for d, sz in zip(dst, sizes):
-            lin_dst = lin_dst * sz + d
-        pairs.append((lin, lin_dst))
-    axis_arg = names[0] if len(names) == 1 else names
-    return axis_arg, pairs
 
 
 def _pad_with_bc(x, lo: tuple, hi: tuple, grid: dmp.GridAttr, boundary: str):
@@ -176,106 +146,19 @@ def _pad_with_bc(x, lo: tuple, hi: tuple, grid: dmp.GridAttr, boundary: str):
     return x
 
 
-def _rounds(swap: dmp.SwapOp) -> list[list[dmp.ExchangeDecl]]:
-    """Group exchanges into dependency rounds.
-
-    Sequential: one round per grid axis, in sweep order (later rounds read
-    halos written by earlier ones — corner forwarding).  Concurrent: all
-    exchanges in one round.
-    """
-    if swap.schedule == "concurrent":
-        return [list(swap.exchanges)]
-    rounds: dict[int, list[dmp.ExchangeDecl]] = {}
-    for e in swap.exchanges:
-        active = [g for g, s in enumerate(e.neighbor) if s != 0]
-        assert len(active) == 1, "sequential schedule expects face exchanges"
-        rounds.setdefault(active[0], []).append(e)
-    return [rounds[g] for g in sorted(rounds)]
-
-
-@dataclass
-class ExchangeRuntime:
-    """How exchanges execute: distributed (inside shard_map, via ppermute)
-    or local emulation (grid axes of size 1 — self-exchange for periodic
-    wrap, no-op for zero BC)."""
-
-    axis_sizes: dict[str, int]
-    distributed: bool
-
-    def start(
-        self,
-        x,
-        decl: dmp.ExchangeDecl,
-        grid: dmp.GridAttr,
-        origin: tuple,
-        periodic: bool,
-        core_shape: tuple,
-    ):
-        # every rank extracts the mirror of the recv rect (uniform SPMD) and
-        # permutes it toward -neighbor; the receiver's recv rect gets filled
-        ext = decl.extract_offset(grid, core_shape)
-        idx = tuple(o - g for o, g in zip(ext, origin))
-        patch = lax.slice(x, idx, tuple(i + s for i, s in zip(idx, decl.send_size)))
-        if self.distributed:
-            axis_arg, pairs = _perm_for(decl.neighbor, grid, self.axis_sizes, periodic)
-            return lax.ppermute(patch, axis_arg, pairs)
-        # local emulation: every grid axis has size 1
-        if periodic:
-            return patch  # self-neighbour wrap
-        return jnp.zeros_like(patch)
-
-    def wait_insert(self, x, decl: dmp.ExchangeDecl, patch, origin: tuple):
-        idx = tuple(o - g for o, g in zip(decl.recv_offset, origin))
-        return lax.dynamic_update_slice(x, patch, idx)
-
-
-def exec_swap_exchanges(x, swap: dmp.SwapOp, rt: ExchangeRuntime):
-    """Run all exchange rounds of a (already padded) swap result."""
-    origin = swap.result_bounds.lb
-    core_shape = swap.temp.type.bounds.shape
-    periodic = swap.boundary == "periodic"
-    for rnd in _rounds(swap):
-        patches = [
-            rt.start(x, e, swap.grid, origin, periodic, core_shape) for e in rnd
-        ]
-        for e, p in zip(rnd, patches):
-            x = rt.wait_insert(x, e, p, origin)
-    return x
-
-
 # --------------------------------------------------------------------------
-# Deferred (overlapped) swaps
-# --------------------------------------------------------------------------
-
-
-@dataclass
-class PendingSwap:
-    """A swap whose exchanges have been *started* but not yet inserted.
-
-    ``padded`` holds the BC-padded core (halos zero/wrapped); consumers may
-    compute interior points from it immediately.  ``finish`` inserts the
-    in-flight patches.
-    """
-
-    swap: dmp.SwapOp
-    padded: Any
-    rt: ExchangeRuntime
-
-    def finish(self):
-        return exec_swap_exchanges(self.padded, self.swap, self.rt)
-
-
-# --------------------------------------------------------------------------
-# Function interpreter
+# Function interpreter — one op-dispatch level, comm ops only
 # --------------------------------------------------------------------------
 
 
 class StencilInterpreter:
-    """Interprets a rank-local stencil function into a JAX computation.
+    """Interprets a rank-local, comm-lowered stencil function into a JAX
+    computation.
 
     Calling convention: positional arrays for every *field* argument of the
     function; returns the updated arrays of every stored-to field, in
-    first-store order.
+    first-store order.  ``dmp.swap`` is rejected — run the dmp→comm
+    pipeline (``lower-comm``) first.
     """
 
     def __init__(
@@ -289,7 +172,8 @@ class StencilInterpreter:
     ) -> None:
         assert backend in ("jnp", "pallas")
         self.func = func
-        self.rt = ExchangeRuntime(axis_sizes, distributed)
+        self.axis_sizes = dict(axis_sizes)
+        self.distributed = distributed
         self.backend = backend
         self.pallas_interpret = pallas_interpret
         self.pallas_tile = pallas_tile
@@ -323,18 +207,17 @@ class StencilInterpreter:
     def _exec(self, op: ir.Operation, env, field_state) -> None:
         if isinstance(op, stencil.LoadOp):
             env[op.results[0]] = field_state[op.field]
-        elif isinstance(op, dmp.SwapOp):
-            x = self._resolve(env[op.temp])
-            lo, hi = op.halo_widths()
-            padded = _pad_with_bc(x, lo, hi, op.grid, op.boundary)
-            if overlap_enabled(op):
-                env[op.results[0]] = PendingSwap(op, padded, self.rt)
-            else:
-                env[op.results[0]] = exec_swap_exchanges(padded, op, self.rt)
         elif isinstance(op, stencil.ApplyOp):
-            self._exec_apply(op, env)
+            rb = op.result_bounds
+            arrays = [env[o] for o in op.operands]
+            origins = [o.type.bounds.lb for o in op.operands]
+            outs = self._apply_backend(op, arrays, origins, rb)
+            for res, arr in zip(op.results, outs):
+                env[res] = arr
+        elif isinstance(op, stencil.CombineOp):
+            env[op.results[0]] = self._exec_combine(op, env)
         elif isinstance(op, stencil.StoreOp):
-            temp = self._resolve(env[op.temp])
+            temp = env[op.temp]
             field_arr = field_state[op.field]
             tb: stencil.Bounds = op.temp.type.bounds
             fb: stencil.Bounds = op.field.type.bounds
@@ -350,129 +233,82 @@ class StencilInterpreter:
                 field_state[op.field] = lax.dynamic_update_slice(
                     field_arr, patch, dst
                 )
-        elif isinstance(op, HaloPadOp):
-            env[op.results[0]] = _exec_halo_pad(
-                op, self._resolve(env[op.operands[0]])
-            )
+        elif isinstance(op, comm.HaloPadOp):
+            env[op.results[0]] = _exec_halo_pad(op, env[op.operands[0]])
         elif isinstance(op, comm.ExchangeStartOp):
-            self._exec_comm_start(op, env)
+            env[op.results[0]] = self._exec_comm_start(op, env[op.temp])
         elif isinstance(op, comm.WaitOp):
             self._exec_comm_wait(op, env)
         elif isinstance(op, comm.AllReduceOp):
-            v = self._resolve(env[op.operands[0]])
+            v = env[op.operands[0]]
             red = {"sum": lax.psum, "max": lax.pmax, "min": lax.pmin}[op.op]
             env[op.results[0]] = (
-                red(v, tuple(op.axes)) if self.rt.distributed else v
+                red(v, tuple(op.axes)) if self.distributed else v
             )
         elif isinstance(op, ir.ReturnOp):
             pass
+        elif isinstance(op, dmp.SwapOp):
+            raise NotImplementedError(
+                "dmp.swap reached the interpreter — run the canonical "
+                "dmp→comm pipeline (lower-comm pass) before execution"
+            )
         else:
             raise NotImplementedError(f"function-level op {op.name}")
 
-    def _resolve(self, v):
-        return v.finish() if isinstance(v, PendingSwap) else v
-
-    # -- apply ----------------------------------------------------------
-    def _exec_apply(self, op: stencil.ApplyOp, env) -> None:
-        rb = op.result_bounds
-        raw = [env[o] for o in op.operands]
-        pending = [i for i, r in enumerate(raw) if isinstance(r, PendingSwap)]
-        if not pending:
-            origins = [o.type.bounds.lb for o in op.operands]
-            outs = self._apply_backend(op, raw, origins, rb)
-            for res, arr in zip(op.results, outs):
-                env[res] = arr
-            return
-
-        # --- overlapped path: interior on in-flight data, frame after wait
-        exts = op.access_extents()
-        rank = rb.rank
-        lo = [0] * rank
-        hi = [0] * rank
-        for _, (l, h) in exts.items():
-            lo = [min(a, b) for a, b in zip(lo, l)]
-            hi = [max(a, b) for a, b in zip(hi, h)]
-        lo_w = [-l for l in lo]
-        hi_w = list(hi)
-        interior = stencil.Bounds(
-            tuple(b + w for b, w in zip(rb.lb, lo_w)),
-            tuple(b - w for b, w in zip(rb.ub, hi_w)),
-        )
-        origins = [o.type.bounds.lb for o in op.operands]
-        # interior uses the padded-but-unexchanged arrays: all its accesses
-        # stay within the core, which is valid before the waits land.
-        pre_arrays = [
-            r.padded if isinstance(r, PendingSwap) else r for r in raw
-        ]
-        interior_out = eval_apply_body(op, pre_arrays, origins, interior)
-        # now wait for the halos and compute the boundary frame
-        post_arrays = [
-            r.finish() if isinstance(r, PendingSwap) else r for r in raw
-        ]
-        outs = [jnp.zeros(rb.shape, interior_out[0].dtype) for _ in op.results]
-        int_idx = tuple(i - b for i, b in zip(interior.lb, rb.lb))
-        outs = [
-            lax.dynamic_update_slice(o, part, int_idx)
-            for o, part in zip(outs, interior_out)
-        ]
-        for slab in _frame_slabs(rb, lo_w, hi_w):
-            slab_out = eval_apply_body(op, post_arrays, origins, slab)
-            idx = tuple(i - b for i, b in zip(slab.lb, rb.lb))
-            outs = [
-                lax.dynamic_update_slice(o, part, idx)
-                for o, part in zip(outs, slab_out)
-            ]
-        for res, arr in zip(op.results, outs):
-            env[res] = arr
-
+    # -- apply backends -------------------------------------------------
     def _apply_backend(self, op, arrays, origins, rb):
-        if self.backend == "pallas":
+        part = op.attributes.get("part")
+        if self.backend == "pallas" and (
+            part is None or part.value == "interior"
+        ):
             from repro.kernels.stencil_apply import run_apply_pallas
 
+            tile = self.pallas_tile
+            # a split interior may not fit the user tile — auto-tile it;
+            # unsplit applies keep run_apply_pallas's loud divisibility
+            # assert so a misconfigured pallas_tile stays diagnosable
+            if (
+                part is not None
+                and tile is not None
+                and any(s % t != 0 for s, t in zip(rb.shape, tile))
+            ):
+                tile = None
             return run_apply_pallas(
                 op,
                 arrays,
                 origins,
                 rb,
-                tile=self.pallas_tile,
+                tile=tile,
                 interpret=self.pallas_interpret,
             )
+        # thin boundary frames go through the jnp evaluator: identical
+        # elementwise arithmetic, no per-slab kernel launch
         return eval_apply_body(op, arrays, origins, rb)
 
-    # -- comm ops (explicit mpi-level lowering) ---------------------------
-    def _exec_comm_start(self, op: comm.ExchangeStartOp, env) -> None:
-        x = env[op.temp]
+    def _exec_combine(self, op: stencil.CombineOp, env):
+        rb = op.result_bounds
+        parts = [env[o] for o in op.operands]
+        out = jnp.zeros(rb.shape, parts[0].dtype)
+        for val, part in zip(op.operands, parts):
+            idx = tuple(l - b for l, b in zip(val.type.bounds.lb, rb.lb))
+            out = lax.dynamic_update_slice(out, part, idx)
+        return out
+
+    # -- comm ops (the mpi-level execution path) -------------------------
+    def _exec_comm_start(self, op: comm.ExchangeStartOp, x):
         origin = op.temp.type.bounds.lb
         idx = tuple(o - g for o, g in zip(op.send_offset, origin))
         patch = lax.slice(
             x, idx, tuple(i + s for i, s in zip(idx, op.size))
         )
         periodic = bool(op.attributes.get("periodic", ir.IntAttr(0)).value)
-        if self.rt.distributed:
-            names = tuple(a for a, _ in op.axis_shifts)
-            steps = {a: s for a, s in op.axis_shifts}
-            sizes = [self.rt.axis_sizes[n] for n in names]
-            pairs: list[tuple[int, int]] = []
-            total = math.prod(sizes)
-            for lin in range(total):
-                rem, coords = lin, []
-                for sz in reversed(sizes):
-                    coords.append(rem % sz)
-                    rem //= sz
-                coords = coords[::-1]
-                dst = [c - steps[n] for c, n in zip(coords, names)]
-                if periodic:
-                    dst = [d % sz for d, sz in zip(dst, sizes)]
-                elif any(d < 0 or d >= sz for d, sz in zip(dst, sizes)):
-                    continue
-                lin_dst = 0
-                for d, sz in zip(dst, sizes):
-                    lin_dst = lin_dst * sz + d
-                pairs.append((lin, lin_dst))
-            axis_arg = names[0] if len(names) == 1 else names
-            env[op.results[0]] = lax.ppermute(patch, axis_arg, pairs)
-        else:
-            env[op.results[0]] = patch if periodic else jnp.zeros_like(patch)
+        if self.distributed:
+            axis_arg, pairs = comm.permute_pairs(
+                op.axis_shifts, self.axis_sizes, periodic
+            )
+            return lax.ppermute(patch, axis_arg, pairs)
+        # local emulation: every grid axis has size 1
+        return patch if periodic else jnp.zeros_like(patch)
 
     def _exec_comm_wait(self, op: comm.WaitOp, env) -> None:
         x = env[op.temp]
@@ -485,107 +321,7 @@ class StencilInterpreter:
         env[op.results[0]] = x
 
 
-def _frame_slabs(rb: stencil.Bounds, lo_w, hi_w):
-    """Disjoint onion-peel partition of core minus interior."""
-    rank = rb.rank
-    slabs = []
-    for d in range(rank):
-        def bounds_for(d_lo, d_ub):
-            lb, ub = [], []
-            for k in range(rank):
-                if k < d:
-                    lb.append(rb.lb[k] + lo_w[k])
-                    ub.append(rb.ub[k] - hi_w[k])
-                elif k == d:
-                    lb.append(d_lo)
-                    ub.append(d_ub)
-                else:
-                    lb.append(rb.lb[k])
-                    ub.append(rb.ub[k])
-            return stencil.Bounds(tuple(lb), tuple(ub))
-
-        if lo_w[d] > 0:
-            slabs.append(bounds_for(rb.lb[d], rb.lb[d] + lo_w[d]))
-        if hi_w[d] > 0:
-            slabs.append(bounds_for(rb.ub[d] - hi_w[d], rb.ub[d]))
-    return [s for s in slabs if all(x > 0 for x in s.shape)]
-
-
-# --------------------------------------------------------------------------
-# dmp → comm lowering (the paper's dmp → mpi step, fig. 4)
-# --------------------------------------------------------------------------
-
-
-def lower_dmp_to_comm(func: ir.FuncOp) -> ir.FuncOp:
-    """Replace every dmp.swap with halo-pad + comm.exchange_start/wait.
-
-    This is the explicit IR-level analogue of the paper's dmp→mpi lowering
-    (temporary buffers + Isend/Irecv + Waitall): each exchange round
-    becomes a set of ``exchange_start`` ops followed by a single ``wait``,
-    with sequential rounds chained through the waited value.
-    """
-    new_func = ir.FuncOp(func.sym_name + "_comm", [a.type for a in func.body.args])
-    vmap: dict[ir.SSAValue, ir.SSAValue] = {}
-    for oa, na in zip(func.body.args, new_func.body.args):
-        vmap[oa] = na
-    block = new_func.body
-    for op in func.body.ops:
-        if not isinstance(op, dmp.SwapOp):
-            cloned = op.clone_into(vmap)
-            block.add_op(cloned)
-            continue
-        x = vmap[op.temp]
-        lo, hi = op.halo_widths()
-        pad = HaloPadOp(x, op.result_bounds, op.boundary, op.grid)
-        block.add_op(pad)
-        cur = pad.results[0]
-        periodic = op.boundary == "periodic"
-        core_shape = op.temp.type.bounds.shape
-        for rnd in _rounds(op):
-            patches = []
-            for e in rnd:
-                shifts = tuple(
-                    (op.grid.axis_names[g], step)
-                    for g, step in enumerate(e.neighbor)
-                    if step != 0
-                )
-                start = comm.ExchangeStartOp(
-                    cur,
-                    shifts,
-                    e.extract_offset(op.grid, core_shape),
-                    e.recv_offset,
-                    e.recv_size,
-                )
-                start.attributes["periodic"] = ir.IntAttr(int(periodic))
-                block.add_op(start)
-                patches.append(start.results[0])
-            wait = comm.WaitOp(cur, patches)
-            block.add_op(wait)
-            cur = wait.results[0]
-        vmap[op.results[0]] = cur
-    return new_func
-
-
-class HaloPadOp(ir.Operation):
-    """``%padded = comm.halo_pad %core`` — BC fill of the halo frame."""
-
-    name = "comm.halo_pad"
-
-    def __init__(
-        self,
-        temp: ir.SSAValue,
-        result_bounds: stencil.Bounds,
-        boundary: str,
-        grid: dmp.GridAttr,
-    ) -> None:
-        super().__init__(
-            operands=[temp],
-            result_types=[stencil.TempType(result_bounds, temp.type.element_type)],
-            attributes={"boundary": ir.StringAttr(boundary), "grid": grid},
-        )
-
-
-def _exec_halo_pad(op: HaloPadOp, x):
+def _exec_halo_pad(op: comm.HaloPadOp, x):
     ib: stencil.Bounds = op.operands[0].type.bounds
     ob: stencil.Bounds = op.results[0].type.bounds
     lo = tuple(i - o for i, o in zip(ib.lb, ob.lb))
@@ -593,3 +329,27 @@ def _exec_halo_pad(op: HaloPadOp, x):
     return _pad_with_bc(
         x, lo, hi, op.attributes["grid"], op.attributes["boundary"].value
     )
+
+
+def run_func_dataflow(
+    func: ir.FuncOp,
+    inputs: Sequence[Any],
+    axis_sizes: dict[str, int],
+    distributed: bool,
+) -> tuple:
+    """Execute a *value-returning* comm-level function (temp args in,
+    ``func.return`` values out) — the entry point ``repro.dist`` uses to
+    run its sequence-halo exchanges through the one shared executor."""
+    interp = StencilInterpreter(
+        func, axis_sizes=axis_sizes, distributed=distributed
+    )
+    env: dict[ir.SSAValue, Any] = dict(zip(func.body.args, inputs))
+    for op in func.body.ops:
+        if isinstance(op, ir.ReturnOp):
+            return tuple(env[o] for o in op.operands)
+        interp._exec(op, env, {})
+    raise AssertionError(f"{func.sym_name}: missing func.return")
+
+
+# Backwards-compatible alias: HaloPadOp moved into the comm dialect.
+HaloPadOp = comm.HaloPadOp

@@ -24,17 +24,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import ir
 from repro.core.dialects import stencil
-from repro.core.lowering import StencilInterpreter, lower_dmp_to_comm
-from repro.core.passes import (
-    PassManager,
-    cse_apply_bodies,
-    dce,
-    decompose_stencil,
-    eliminate_redundant_swaps,
-    enable_comm_compute_overlap,
-    fuse_applies,
-    use_diagonal_exchanges,
-)
+from repro.core.lowering import StencilInterpreter
+from repro.core.passes import PassManager, PipelineContext, build_pipeline
 from repro.core.passes.decompose import SlicingStrategy
 
 
@@ -45,10 +36,34 @@ class CompileOptions:
     cse: bool = True
     overlap: bool = False  # beyond-paper: comm/compute overlap
     diagonal: bool = False  # beyond-paper: concurrent corner exchanges
-    comm_dialect: bool = False  # lower dmp→comm explicitly (paper fig. 4)
+    # DEPRECATED no-op: the dmp→comm lowering is the canonical path and
+    # always runs — every distributed compile executes comm ops.
+    comm_dialect: bool = False
     pallas_interpret: bool = True  # CPU container: interpret kernels
     pallas_tile: Optional[tuple] = None
     donate: bool = True
+    # Explicit pipeline spec (DESIGN.md §2 grammar); overrides the
+    # fuse/cse/diagonal/overlap flags when set.
+    pipeline: Optional[str] = None
+
+
+def default_pipeline(opts: "CompileOptions") -> str:
+    """The canonical pipeline spec the option flags denote (fig. 4):
+    [fuse,cse] → decompose → swap-elim → [diagonal] → [overlap] →
+    lower-comm.  Always ends in the dmp→comm lowering — the interpreter
+    executes comm ops only."""
+    stages: list[str] = []
+    if opts.fuse:
+        stages.append("fuse")
+    if opts.cse:
+        stages += ["cse", "dce"]
+    stages += ["decompose", "swap-elim"]
+    if opts.diagonal:
+        stages.append("diagonal")
+    if opts.overlap:
+        stages.append("overlap")
+    stages.append("lower-comm")
+    return ",".join(stages)
 
 
 def trivial_strategy(rank: int) -> SlicingStrategy:
@@ -65,6 +80,8 @@ class StencilComputation:
             a for a in func.body.args if isinstance(a.type, stencil.FieldType)
         ]
         self.last_local: Optional[ir.FuncOp] = None  # for inspection/tests
+        self.last_pipeline: Optional[str] = None
+        self.last_timings: list = []  # (pass name, seconds) per stage
 
     # ------------------------------------------------------------------
     def prepare_local(
@@ -72,27 +89,20 @@ class StencilComputation:
         strategy: Optional[SlicingStrategy] = None,
         options: Optional[CompileOptions] = None,
     ) -> ir.FuncOp:
-        """Run the shared pass pipeline; returns the rank-local function."""
+        """Run the shared pass pipeline; returns the rank-local,
+        comm-lowered function (no dmp.swap survives — the canonical
+        dmp→comm path is the only one)."""
         opts = options or CompileOptions()
         rank = self.field_args[0].type.bounds.rank if self.field_args else 1
         strategy = strategy or trivial_strategy(rank)
 
-        work = _clone_func(self.func)
-        if opts.fuse:
-            fuse_applies(work)
-        if opts.cse:
-            cse_apply_bodies(work)
-            dce(work)
-        local = decompose_stencil(work, strategy, boundary=self.boundary)
-        eliminate_redundant_swaps(local)
-        if opts.diagonal:
-            use_diagonal_exchanges(local)
-        if opts.overlap:
-            enable_comm_compute_overlap(local)
-        if opts.comm_dialect:
-            local = lower_dmp_to_comm(local)
-        ir.verify_module(local)
+        spec = opts.pipeline or default_pipeline(opts)
+        ctx = PipelineContext(strategy=strategy, boundary=self.boundary)
+        pm = PassManager(build_pipeline(spec, ctx))
+        local = pm.run(_clone_func(self.func))
         self.last_local = local
+        self.last_pipeline = spec
+        self.last_timings = list(pm.timings)
         return local
 
     # ------------------------------------------------------------------

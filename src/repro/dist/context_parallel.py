@@ -10,12 +10,14 @@ the stencil DSLs use, instead of a bespoke ring path:
 
 1. declare the exchange as a ``dmp.swap`` over a **1-D GridAttr whose
    grid axis is the sequence dimension** (``_build_swap_func``);
-2. lower it with the shared ``lower_dmp_to_comm`` pass — the same
+2. lower it with the shared ``lower_dmp_to_comm`` pass — the *canonical*
    dmp → comm (≈ MPI) step every stencil program takes — yielding
    ``comm.halo_pad`` + ``comm.exchange_start`` + ``comm.wait`` ops;
-3. interpret those comm ops with the shared ``StencilInterpreter``
-   executor inside ``shard_map``, which turns each ``exchange_start``
-   into a ``lax.ppermute`` round over the mesh axis.
+3. execute those comm ops with the shared comm-level executor
+   (``run_func_dataflow`` / ``StencilInterpreter``) inside
+   ``shard_map``, which turns each ``exchange_start`` into a
+   ``lax.ppermute`` whose pairs come from the one shared
+   ``comm.permute_pairs`` construction.
 
 One exchange abstraction drives stencil *and* model parallelism — the
 distribution-correctness guarantees of ``tests/test_distributed.py``
@@ -33,7 +35,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import ir
 from repro.core.dialects import dmp, stencil
-from repro.core.lowering import StencilInterpreter, lower_dmp_to_comm
+from repro.core.lowering import lower_dmp_to_comm, run_func_dataflow
 from repro.core.passes.decompose import make_strategy_1d
 from repro.dist.sharding import shard_map
 
@@ -110,17 +112,12 @@ def seq_halo_exchange(x_loc, spec: SeqHaloSpec, *, distributed: bool = True):
     compiles): zero-BC halos stay zero, periodic halos wrap locally.
     """
     func = _comm_func(tuple(x_loc.shape), spec)
-    interp = StencilInterpreter(
-        func, axis_sizes={spec.axis: spec.n_shards}, distributed=distributed
+    (out,) = run_func_dataflow(
+        func,
+        [x_loc],
+        axis_sizes={spec.axis: spec.n_shards},
+        distributed=distributed,
     )
-    env: dict = {func.body.args[0]: x_loc}
-    out = None
-    for op in func.body.ops:
-        if isinstance(op, ir.ReturnOp):
-            out = env[op.operands[0]]
-            break
-        interp._exec(op, env, {})
-    assert out is not None, "seq_halo IR missing func.return"
     return out
 
 

@@ -22,6 +22,11 @@ SCENARIOS = [
     "box",
     "box-diagonal",
     "overlap",
+    "overlap-zero",
+    "overlap-periodic",
+    "overlap-box-seq",
+    "overlap-diagonal",
+    "overlap-pallas",
     "comm_dialect",
     "pallas",
     "wide-halo",

@@ -1,0 +1,295 @@
+"""Declarative pass pipelines + canonical dmp→comm lowering + IR-level
+overlap: spec grammar, golden op sequences from split_overlapped_applies,
+sym_name preservation, and the interpreter's comm-only contract."""
+import numpy as np
+import pytest
+
+from repro.core import ir
+from repro.core.dialects import comm, dmp, stencil
+from repro.core.lowering import StencilInterpreter
+from repro.core.passes import (
+    PipelineContext,
+    PipelineError,
+    build_pipeline,
+    decompose_stencil,
+    eliminate_redundant_swaps,
+    enable_comm_compute_overlap,
+    lower_dmp_to_comm,
+    parse_pipeline,
+    run_pipeline,
+    split_overlapped_applies,
+    use_diagonal_exchanges,
+)
+from repro.core.passes.decompose import make_strategy_2d
+from repro.core.program import CompileOptions, StencilComputation, default_pipeline
+from repro.frontends.oec_like import ProgramBuilder
+
+
+def _jacobi_prog(shape=(32, 32)):
+    p = ProgramBuilder("jacobi", shape)
+    u = p.input("u")
+    out = p.output("out")
+    t = p.load(u)
+    r = p.apply(
+        [t],
+        lambda b, u: (u.at(-1, 0) + u.at(1, 0) + u.at(0, -1) + u.at(0, 1)) * 0.25,
+    )
+    p.store(r, out)
+    return p.build_func()
+
+
+def _box_prog(shape=(32, 32)):
+    p = ProgramBuilder("box", shape)
+    u = p.input("u")
+    out = p.output("out")
+    t = p.load(u)
+    r = p.apply(
+        [t],
+        lambda b, u: u.at(-1, -1) + u.at(1, 1) * 0.5 + u.at(-1, 1) * 0.25
+        + u.at(0, 0),
+    )
+    p.store(r, out)
+    return p.build_func()
+
+
+# -------------------------------------------------------------------------
+# pipeline spec grammar
+# -------------------------------------------------------------------------
+
+
+def test_parse_pipeline_roundtrip():
+    spec = "fuse,cse,dce,decompose{grid=2x2xy,boundary=periodic},swap-elim,lower-comm"
+    stages = parse_pipeline(spec)
+    assert [s[0] for s in stages] == [
+        "fuse", "cse", "dce", "decompose", "swap-elim", "lower-comm",
+    ]
+    assert stages[3][1] == {"grid": "2x2xy", "boundary": "periodic"}
+
+
+def test_parse_pipeline_rejects_garbage():
+    with pytest.raises(PipelineError):
+        parse_pipeline("fuse,decompose{grid=2x2")
+    with pytest.raises(PipelineError):
+        parse_pipeline("decompose{gridnovalue}")
+    with pytest.raises(PipelineError):
+        build_pipeline("no-such-pass")
+
+
+def test_pipeline_rejects_unknown_options():
+    # misspelled/inapplicable options must not be silently ignored
+    with pytest.raises(PipelineError, match="grd"):
+        build_pipeline("decompose{grd=4x2}", PipelineContext())
+    with pytest.raises(PipelineError, match="swap-elim"):
+        build_pipeline("swap-elim{aggressive=1}")
+    with pytest.raises(PipelineError, match="dims"):
+        build_pipeline("decompose{dims=0x1}", PipelineContext())
+    with pytest.raises(PipelineError, match="boundary"):
+        build_pipeline("decompose{grid=2x2,boundary=mirror}")
+
+
+def test_grid_spec_with_axis_names():
+    stages = build_pipeline("decompose{grid=2x2xy}", PipelineContext())
+    func = _jacobi_prog()
+    local = stages[0](func)
+    (sw,) = [op for op in local.body.ops if isinstance(op, dmp.SwapOp)]
+    assert sw.grid.shape == (2, 2)
+    assert sw.grid.axis_names == ("x", "y")
+
+
+def test_default_pipeline_always_lowers_comm():
+    assert default_pipeline(CompileOptions()).endswith("lower-comm")
+    spec = default_pipeline(CompileOptions(overlap=True, diagonal=True))
+    assert "diagonal" in spec and "overlap" in spec
+    assert spec.index("diagonal") < spec.index("overlap")
+
+
+def test_pipeline_timings_recorded():
+    comp = StencilComputation(_jacobi_prog(), boundary="periodic")
+    comp.prepare_local(make_strategy_2d((2, 2)), CompileOptions(overlap=True))
+    names = [n for n, _ in comp.last_timings]
+    assert names == comp.last_pipeline.split(",")
+    assert all(sec >= 0 for _, sec in comp.last_timings)
+
+
+# -------------------------------------------------------------------------
+# canonical lowering invariants
+# -------------------------------------------------------------------------
+
+
+def test_lower_dmp_to_comm_preserves_sym_name():
+    local = decompose_stencil(_jacobi_prog(), make_strategy_2d((2, 2)))
+    lowered = lower_dmp_to_comm(local)
+    assert lowered.sym_name == local.sym_name
+    assert not any(isinstance(op, dmp.SwapOp) for op in lowered.body.ops)
+
+
+def test_prepare_local_emits_comm_only():
+    comp = StencilComputation(_jacobi_prog(), boundary="periodic")
+    for opts in (CompileOptions(), CompileOptions(overlap=True),
+                 CompileOptions(diagonal=True, overlap=True)):
+        local = comp.prepare_local(make_strategy_2d((2, 2)), opts)
+        assert not any(isinstance(op, dmp.SwapOp) for op in local.body.ops)
+        assert any(isinstance(op, comm.ExchangeStartOp) for op in local.body.ops)
+
+
+def test_interpreter_rejects_dmp_swap():
+    local = decompose_stencil(_jacobi_prog(), make_strategy_2d((2, 2)))
+    interp = StencilInterpreter(local, axis_sizes={}, distributed=False)
+    with pytest.raises(NotImplementedError, match="dmp.swap"):
+        interp(np.zeros((16, 16), np.float32), np.zeros((16, 16), np.float32))
+
+
+def test_comm_dialect_option_is_noop():
+    comp = StencilComputation(_jacobi_prog(), boundary="periodic")
+    a = comp.prepare_local(make_strategy_2d((2, 2)), CompileOptions())
+    b = comp.prepare_local(
+        make_strategy_2d((2, 2)), CompileOptions(comm_dialect=True)
+    )
+    assert [op.name for op in a.body.ops] == [op.name for op in b.body.ops]
+
+
+def test_permute_pairs_shared_helper():
+    # 1-axis periodic shift over 4 ranks: full cycle
+    axis, pairs = comm.permute_pairs((("x", 1),), {"x": 4}, periodic=True)
+    assert axis == "x"
+    assert sorted(pairs) == [(0, 3), (1, 0), (2, 1), (3, 2)]
+    # zero-BC drops out-of-grid destinations
+    _, open_pairs = comm.permute_pairs((("x", 1),), {"x": 4}, periodic=False)
+    assert (0, 3) not in open_pairs and len(open_pairs) == 3
+    # diagonal: two axes linearized row-major
+    axes, dpairs = comm.permute_pairs(
+        (("x", 1), ("y", 1)), {"x": 2, "y": 2}, periodic=True
+    )
+    assert axes == ("x", "y")
+    assert len(dpairs) == 4
+
+
+# -------------------------------------------------------------------------
+# split_overlapped_applies: golden op sequences
+# -------------------------------------------------------------------------
+
+
+def _overlap_split(func, grid=(2, 2), diagonal=False):
+    local = decompose_stencil(func, make_strategy_2d(grid), boundary="periodic")
+    eliminate_redundant_swaps(local)
+    if diagonal:
+        use_diagonal_exchanges(local)
+    assert enable_comm_compute_overlap(local) == 1
+    split = split_overlapped_applies(local)
+    ir.verify_module(split)
+    return split
+
+
+def test_split_golden_sequence_star_concurrent():
+    split = _overlap_split(_jacobi_prog())
+    names = [op.name for op in split.body.ops]
+    assert names == (
+        ["stencil.load", "comm.halo_pad"]
+        + ["comm.exchange_start"] * 4   # 4 face exchanges, one round
+        + ["stencil.apply"]             # interior, between starts and wait
+        + ["comm.wait"]
+        + ["stencil.apply"] * 4         # onion-peel boundary frames
+        + ["stencil.combine", "stencil.store", "func.return"]
+    ), names
+
+
+def test_split_golden_sequence_box_sequential():
+    split = _overlap_split(_box_prog())
+    names = [op.name for op in split.body.ops]
+    # sequential corner-forwarding: round 1 (axis 0) overlaps the interior,
+    # round 2 (axis 1) chains off round 1's wait
+    assert names == (
+        ["stencil.load", "comm.halo_pad"]
+        + ["comm.exchange_start"] * 2   # round 1: axis-0 faces
+        + ["stencil.apply"]             # interior
+        + ["comm.wait"]
+        + ["comm.exchange_start"] * 2   # round 2: axis-1 faces (forwarded)
+        + ["comm.wait"]
+        + ["stencil.apply"] * 4
+        + ["stencil.combine", "stencil.store", "func.return"]
+    ), names
+
+
+def test_split_golden_sequence_box_diagonal():
+    split = _overlap_split(_box_prog(), diagonal=True)
+    names = [op.name for op in split.body.ops]
+    # diagonal rewrite: concurrent faces + corners, all in one round
+    n_starts = names.count("comm.exchange_start")
+    assert n_starts == 8  # 4 faces + 4 corners on a 2x2 grid
+    assert names.index("stencil.apply") > names.index("comm.exchange_start")
+    assert names.index("stencil.apply") < names.index("comm.wait")
+    assert names.count("comm.wait") == 1
+
+
+def test_split_part_attributes_and_bounds():
+    split = _overlap_split(_jacobi_prog())
+    applies = [op for op in split.body.ops if isinstance(op, stencil.ApplyOp)]
+    parts = [op.attributes["part"].value for op in applies]
+    assert parts == ["interior"] + ["frame"] * 4
+    interior = applies[0]
+    # jacobi halo 1: interior = local core (16x16) shrunk by 1 per side
+    assert interior.result_bounds.shape == (14, 14)
+    (combine,) = [op for op in split.body.ops if isinstance(op, stencil.CombineOp)]
+    assert combine.result_bounds.shape == (16, 16)
+    # parts tile the result exactly
+    covered = sum(
+        int(np.prod(p.type.bounds.shape)) for p in combine.operands
+    )
+    assert covered == 16 * 16
+
+
+def test_split_skips_ineligible_swaps():
+    # a swap whose result is consumed by two applies must not be split
+    p = ProgramBuilder("two", (16, 16))
+    u = p.input("u")
+    out = p.output("out")
+    t = p.load(u)
+    a = p.apply([t], lambda b, u: (u.at(-1, 0) + u.at(1, 0)) * 0.5)
+    c = p.apply([t], lambda b, u: (u.at(0, -1) + u.at(0, 1)) * 0.5)
+    s = p.apply([a, c], lambda b, x, y: x.at(0, 0) + y.at(0, 0))
+    p.store(s, out)
+    func = p.build_func()
+    local = decompose_stencil(func, make_strategy_2d((2, 2)))
+    eliminate_redundant_swaps(local)
+    n_swaps = sum(1 for op in local.body.ops if isinstance(op, dmp.SwapOp))
+    enable_comm_compute_overlap(local)
+    split = split_overlapped_applies(local)
+    remaining = sum(1 for op in split.body.ops if isinstance(op, dmp.SwapOp))
+    # declined swaps are untagged, so lower-comm handles them silently
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        lowered = lower_dmp_to_comm(split)
+    assert not any(isinstance(op, dmp.SwapOp) for op in lowered.body.ops)
+    assert remaining <= n_swaps
+    ir.verify_module(lowered)
+
+
+def test_split_is_identity_when_nothing_tagged():
+    local = decompose_stencil(_jacobi_prog(), make_strategy_2d((2, 2)))
+    assert split_overlapped_applies(local) is local
+
+
+def test_lower_comm_warns_on_unsplit_overlap_tag():
+    # overlap-tag without split-overlap: the tag must not vanish silently
+    local = decompose_stencil(_jacobi_prog(), make_strategy_2d((2, 2)))
+    eliminate_redundant_swaps(local)
+    enable_comm_compute_overlap(local)
+    with pytest.warns(UserWarning, match="overlap-tagged"):
+        lower_dmp_to_comm(local)
+
+
+def test_pipeline_overlap_semantics_single_device():
+    rng = np.random.default_rng(11)
+    u0 = rng.standard_normal((24, 24)).astype(np.float32)
+    out0 = np.zeros_like(u0)
+    base = StencilComputation(_box_prog((24, 24)), boundary="periodic").compile(
+        options=CompileOptions()
+    )(u0, out0)
+    via_spec = StencilComputation(_box_prog((24, 24)), boundary="periodic").compile(
+        options=CompileOptions(
+            pipeline="fuse,cse,dce,decompose,swap-elim,overlap,lower-comm"
+        )
+    )(u0, out0)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(via_spec))
