@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import gpts, save_record, table, time_step
-from repro.core.program import CompileOptions, StencilComputation
+from repro.api import Target
 from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
 
 
@@ -37,19 +37,19 @@ def run(fast: bool = False, overlap: str = "off") -> dict:
     u0 = jnp.asarray(rng.standard_normal(shape), jnp.float32)
 
     variants = {
-        "jnp_raw": CompileOptions(backend="jnp", fuse=False, cse=False),
-        "jnp_opt": CompileOptions(backend="jnp", fuse=True, cse=True),
-        "pallas_interpret": CompileOptions(backend="pallas"),
+        "jnp_raw": Target(backend="jnp", fuse=False, cse=False),
+        "jnp_opt": Target(backend="jnp", fuse=True, cse=True),
+        "pallas_interpret": Target(backend="pallas"),
     }
     if overlap == "on":
-        variants["jnp_opt_overlap"] = CompileOptions(
+        variants["jnp_opt_overlap"] = Target(
             backend="jnp", fuse=True, cse=True, overlap=True
         )
     record, rows = {}, []
     ref_out = None
-    for name, opts in variants.items():
+    for name, target in variants.items():
         op = Operator(Eq(u.dt, 0.5 * u.laplace), dt=1e-7, boundary="zero")
-        step = op.compile_step(options=opts)
+        step = op.compile_step(target=target)
         out = np.asarray(step(u0)[0])
         if ref_out is None:
             ref_out = out

@@ -12,9 +12,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import gpts, save_record, table, time_step
+from repro.api import Program, Target, compile as api_compile
 from repro.core.dialects import stencil
 from repro.core.passes import cse_apply_bodies, dce, fuse_applies
-from repro.core.program import CompileOptions, StencilComputation
 from repro.frontends.psyclone_like import build_stencil_func
 
 
@@ -67,11 +67,11 @@ def run(fast: bool = False) -> dict:
         dce(func)
         n_fused = _count_applies(func)
 
-        comp = StencilComputation(func, boundary="periodic")
-        step = comp.compile(options=CompileOptions())
+        prog = Program(func, boundary="periodic")
+        step = api_compile(prog, Target())
         args = [
             jnp.asarray(rng.standard_normal(shape), jnp.float32)
-            for _ in range(len(comp.field_args))
+            for _ in range(len(prog.field_args))
         ]
         sec = time_step(lambda *a: step(*a), args, iters=3, warmup=1)
         tp = gpts(shape, sec)

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import gpts, save_record, table, time_step
-from repro.core.program import CompileOptions, time_loop
+from repro.api import Target, time_loop
 from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
 
 CASES = [
@@ -30,7 +30,7 @@ def run(fast: bool = False) -> dict:
             g = Grid(shape=shape, extent=tuple(1.0 for _ in shape))
             u = TimeFunction(name="u", grid=g, space_order=so)
             op = Operator(Eq(u.dt, 0.5 * u.laplace), dt=1e-7, boundary="zero")
-            step = op.compile_step(options=CompileOptions())
+            step = op.compile_step(target=Target())
             u0 = jnp.asarray(
                 np.random.default_rng(0).standard_normal(shape), jnp.float32
             )

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import gpts, save_record, table, time_step
-from repro.core.program import CompileOptions, time_loop
+from repro.api import Target, time_loop
 from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
 
 CASES = [
@@ -29,7 +29,7 @@ def run(fast: bool = False) -> dict:
             g = Grid(shape=shape, extent=tuple(1.0 for _ in shape))
             u = TimeFunction(name="u", grid=g, space_order=so, time_order=2)
             op = Operator(Eq(u.dt2, 1.0 * u.laplace), dt=1e-7, boundary="zero")
-            step = op.compile_step(options=CompileOptions())
+            step = op.compile_step(target=Target())
             rng = np.random.default_rng(0)
             um1 = jnp.asarray(rng.standard_normal(shape), jnp.float32)
             u0 = jnp.asarray(rng.standard_normal(shape), jnp.float32)

@@ -47,7 +47,7 @@ def _stencil_stats(kind: str, so: int, grid_shape: tuple) -> dict:
                      time_order=2 if kind == "wave" else 1)
     eq = Eq(u.dt2 if kind == "wave" else u.dt, 1.0 * u.laplace)
     op = Operator(eq, dt=1e-7)
-    func = op.computation.func
+    func = op.program.func
     local = decompose_stencil(func, make_strategy_3d(grid_shape))
     eliminate_redundant_swaps(local)
     swaps = [o for o in local.body.ops if isinstance(o, dmp.SwapOp)]

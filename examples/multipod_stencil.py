@@ -23,8 +23,8 @@ def main() -> None:
     import jax
     from jax.sharding import Mesh
 
+    from repro import api
     from repro.core.passes.decompose import SlicingStrategy
-    from repro.core.program import CompileOptions
     from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
 
     assert len(jax.devices()) == 512, len(jax.devices())
@@ -38,8 +38,9 @@ def main() -> None:
     u = TimeFunction(name="u", grid=g, space_order=8, time_order=2)
     op = Operator(Eq(u.dt2, 1.0 * u.laplace), dt=1e-7, boundary="zero")
 
-    comp = op.computation
-    lowered = comp.lower(mesh, strategy, CompileOptions(overlap=True))
+    target = api.Target(mesh=mesh, strategy=strategy, overlap=True)
+    artifact = api.compile(op.program, target)
+    lowered = artifact.lower()
     compiled = lowered.compile()
 
     mem = compiled.memory_analysis()
@@ -57,11 +58,11 @@ def main() -> None:
     print(f"collective-permute ops in HLO: {n_permute} "
           "(halo exchanges, 3 axes x 2 dirs x radius batches)")
     # the canonical comm-level IR: overlap is visible as starts → interior
-    # apply → wait → frame applies (pipeline: comp.last_pipeline)
-    local = comp.last_local
+    # apply → wait → frame applies (artifact.local_ir)
+    local = artifact.local_ir
     from repro.core.dialects import comm
 
-    print(f"pipeline: {comp.last_pipeline}")
+    print(f"pipeline: {artifact.pipeline_report.spec}")
     print("comm IR : " + " -> ".join(_rle(o.name for o in local.body.ops)))
     starts = [o for o in local.body.ops
               if isinstance(o, comm.ExchangeStartOp)]

@@ -30,10 +30,9 @@ def pw_advection(u, v, w, su, sv, sw):
 def main() -> None:
     import jax.numpy as jnp
 
+    from repro import api
     from repro.core.dialects import stencil
-    from repro.core import ir
     from repro.core.passes import cse_apply_bodies, dce, fuse_applies
-    from repro.core.program import CompileOptions, StencilComputation
     from repro.frontends.psyclone_like import build_stencil_func
 
     shape = (64, 64, 32)
@@ -46,15 +45,15 @@ def main() -> None:
     n_fused = sum(1 for op in func.body.ops if isinstance(op, stencil.ApplyOp))
     print(f"recognized {n_raw} stencil computations -> fused into {n_fused} "
           f"region(s)   (paper fig. 10: PW advection 3 -> 1)")
-    print("\n--- fused stencil IR ---")
-    text = ir.print_module(func)
-    print("\n".join(text.splitlines()[:20]) + "\n  ...")
 
-    comp = StencilComputation(func, boundary="periodic")
-    step = comp.compile(options=CompileOptions())
+    prog = api.Program(func, boundary="periodic")
+    print("\n--- fused stencil IR (what the fingerprint hashes) ---")
+    print("\n".join(prog.ir_text().splitlines()[:20]) + "\n  ...")
+
+    step = api.compile(prog, api.Target())
     rng = np.random.default_rng(0)
     args = [jnp.asarray(rng.standard_normal(shape), jnp.float32)
-            for _ in comp.field_args]
+            for _ in prog.field_args]
     outs = step(*args)
     print(f"\nran fused kernel: {len(outs)} output fields, "
           f"all finite: {all(bool(jnp.isfinite(o).all()) for o in outs)}")

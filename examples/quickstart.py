@@ -1,10 +1,13 @@
-"""Quickstart: the paper's listing-5 experience on the JAX/TPU stack.
+"""Quickstart: the paper's listing-5 experience on the JAX/TPU stack,
+through the one compile surface — ``Program`` / ``Target`` / ``compile``.
 
-Model 2-D heat diffusion symbolically (Devito-like DSL), compile through
-the shared stencil stack, and run it — single device here; pass
-``--ranks N`` to decompose over N virtual devices with automatic dmp
-halo exchanges (set XLA_FLAGS=--xla_force_host_platform_device_count=N
-before running for N>1).
+1. model 2-D heat diffusion symbolically (Devito-like DSL) — the
+   frontend produces a ``repro.api.Program`` (frontend-neutral IR);
+2. describe *where and how* to run with a ``repro.api.Target`` (device
+   mesh + decomposition strategy + backend + pipeline knobs);
+3. ``repro.api.compile(program, target)`` returns a ``CompiledStencil``
+   — a reusable artifact cached process-wide on (program fingerprint,
+   target fingerprint), so compiling the same program twice is free.
 
     PYTHONPATH=src python examples/quickstart.py
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -22,38 +25,46 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=100)
     args = ap.parse_args()
 
-    import jax
     import jax.numpy as jnp
-    from jax.sharding import Mesh
 
-    from repro.core.passes.decompose import make_strategy_1d
+    import repro
     from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
 
-    # -- model the problem (paper listing 5) ------------------------------
+    # -- 1. model the problem (paper listing 5) → Program ------------------
     grid = Grid(shape=(args.size, args.size), extent=(1.0, 1.0))
     u = TimeFunction(name="u", grid=grid, space_order=2)
     eqn = Eq(u.dt, 0.5 * u.laplace)
     # explicit-Euler stability: dt <= h²/(4·alpha); run at 80% of it
     dt = 0.8 * grid.spacing[0] ** 2 / (4 * 0.5)
     op = Operator(eqn, dt=dt, boundary="zero")
+    prog = op.program
+    print(f"program: {prog.name} fields={list(prog.field_names)} "
+          f"fingerprint={prog.fingerprint}")
+
+    # -- 2. describe the target -------------------------------------------
+    # Target.auto() discovers devices (1-D decomposition over all of them);
+    # an explicit Target(mesh=..., strategy=...) pins the layout.
+    target = repro.Target.auto(ranks=args.ranks)
+    if target.distributed:
+        print(f"decomposed over {args.ranks} ranks (1-D slabs + halo swaps)")
+
+    # -- 3. compile → CompiledStencil --------------------------------------
+    step = repro.compile(prog, target)
+    print(step.pipeline_report)
+
+    # a second compile of the same program+target is a cache hit: the
+    # pass pipeline does not re-run and the artifact is the same object
+    again = repro.compile(op.program, target)
+    stats = repro.cache_stats()
+    print(f"recompile: cached={again is step} "
+          f"(cache hits={stats.hits} misses={stats.misses})")
 
     # -- initial condition: hot square in the center ----------------------
     u0 = np.zeros(grid.shape, np.float32)
     c = args.size // 2
     u0[c - 8 : c + 8, c - 8 : c + 8] = 1.0
 
-    mesh = strategy = None
-    if args.ranks > 1:
-        assert len(jax.devices()) >= args.ranks, (
-            f"need {args.ranks} devices; set "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count={args.ranks}"
-        )
-        mesh = Mesh(np.array(jax.devices()[: args.ranks]), ("x",))
-        strategy = make_strategy_1d(args.ranks)
-        print(f"decomposed over {args.ranks} ranks (1-D slabs + halo swaps)")
-
-    (uT,) = op.apply([jnp.asarray(u0)], timesteps=args.steps,
-                     mesh=mesh, strategy=strategy)
+    (uT,) = step.time_loop([jnp.asarray(u0)], args.steps)
     uT = np.asarray(uT)
 
     print(f"steps={args.steps}  total heat: {u0.sum():.3f} -> {uT.sum():.3f}")

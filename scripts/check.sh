@@ -57,6 +57,36 @@ print(f"{len(files) - len(failed)}/{len(files)} benchmark modules import cleanly
 sys.exit(1 if failed else 0)
 EOF
 
+echo "== compile-cache smoke =="
+python - <<'EOF'
+# the quickstart program compiled twice: the second compile must be a
+# cache hit (same artifact, hit counter bumped) and run zero passes
+from repro import api
+from repro.core.passes import PassManager
+from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
+
+
+def quickstart_program():
+    grid = Grid(shape=(64, 64), extent=(1.0, 1.0))
+    u = TimeFunction(name="u", grid=grid, space_order=2)
+    dt = 0.8 * grid.spacing[0] ** 2 / (4 * 0.5)
+    return Operator(Eq(u.dt, 0.5 * u.laplace), dt=dt, boundary="zero").program
+
+
+target = api.Target()
+first = api.compile(quickstart_program(), target)
+runs = PassManager.runs_completed
+hits = api.cache_stats().hits
+second = api.compile(quickstart_program(), target)
+assert second is first, "second compile did not return the cached artifact"
+assert api.cache_stats().hits == hits + 1, "cache hit counter did not bump"
+assert PassManager.runs_completed == runs, (
+    "cache hit re-ran the pass pipeline"
+)
+print(f"cache smoke OK: hit on recompile, {runs} pipeline run(s) total, "
+      f"stats={api.cache_stats().as_dict()}")
+EOF
+
 echo "== pass-pipeline smoke =="
 python -m repro.core.passes \
   "fuse,cse,dce,decompose{grid=2x2},swap-elim,overlap,lower-comm" --quiet

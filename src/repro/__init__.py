@@ -1,0 +1,33 @@
+"""repro — a shared compilation stack for distributed-memory stencil DSLs.
+
+The compile surface lives in ``repro.api`` and is re-exported here:
+
+    import repro
+    step = repro.compile(program, repro.Target.auto())
+
+Imports are lazy so ``import repro`` stays light (no jax import until the
+API is touched).
+"""
+
+__all__ = [
+    "api",
+    "Program",
+    "Target",
+    "TargetError",
+    "CompiledStencil",
+    "compile",
+    "cache_stats",
+    "clear_cache",
+]
+
+
+def __getattr__(name: str):
+    if name in __all__:
+        import repro.api as api
+
+        return api if name == "api" else getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

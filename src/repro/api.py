@@ -1,0 +1,664 @@
+"""One compile surface: ``Program`` / ``Target`` / ``compile``.
+
+The paper's central claim is that three stencil DSLs share one
+compilation stack; this module is the one *API* they share, following
+MLIR's module → pass-pipeline → target structure and Devito's
+Operator-as-cached-artifact design:
+
+    prog   = oec_like.ProgramBuilder(...).finish(boundary="periodic")
+    target = Target(mesh=mesh, strategy=make_strategy_2d((4, 2)))
+    step   = compile(prog, target)      # CompiledStencil
+    u1 = step(u0, out0)                 # global arrays in / out
+    step.pipeline_report                # per-pass timings
+    step.local_ir                       # the comm-lowered rank-local IR
+    step.cost()                         # roofline terms (launch/roofline)
+
+- ``Program``  — the frontend-neutral IR artifact every frontend
+  produces: a verified ``func.func`` of stencil ops plus metadata
+  (boundary condition, field names, rank) and a stable fingerprint.
+- ``Target``   — a frozen description of *where and how* to compile:
+  device mesh, decomposition strategy, compute backend, pass-pipeline
+  spec, pallas/donation knobs.  Mismatches (unknown backend, strategy
+  grid vs mesh axes) are rejected at construction, not deep inside
+  lowering.
+- ``compile(program, target) -> CompiledStencil`` — runs the shared
+  pass pipeline and wraps the interpreter in ``shard_map``/``jit``.
+  Results are cached process-wide on ``(program.fingerprint,
+  target.fingerprint)``, so sweep loops (benchmarks), the serve engine
+  and ``repro.dist`` never re-run passes or re-trace for a program +
+  target they have already compiled.  ``cache_stats()`` reports
+  hits/misses; ``clear_cache()`` resets.
+
+``repro.core.program.StencilComputation`` remains as a thin deprecated
+shim over this surface (see DESIGN.md §1 for the migration table).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import ir
+from repro.core.dialects import stencil
+from repro.core.lowering import StencilInterpreter
+from repro.core.passes import (
+    PassManager,
+    PipelineContext,
+    build_pipeline,
+)
+from repro.core.passes.decompose import SlicingStrategy
+
+
+class TargetError(ValueError):
+    """A target description that can never compile (bad backend, strategy
+    grid not matching the mesh, decomposed dim outside the program rank)."""
+
+
+# --------------------------------------------------------------------------
+# Program — the frontend-neutral IR artifact
+# --------------------------------------------------------------------------
+
+
+class Program:
+    """A verified stencil program plus the metadata compilation needs.
+
+    All three frontends produce this: ``devito_like.Operator.program``,
+    ``psyclone_like.recognize(...)``, ``oec_like.ProgramBuilder.finish()``.
+    The fingerprint is taken at construction (stable textual IR +
+    boundary), so mutate the ``FuncOp`` *before* wrapping it.
+    """
+
+    def __init__(
+        self,
+        func: ir.FuncOp,
+        boundary: str = "zero",
+        field_names: Optional[Sequence[str]] = None,
+        name: Optional[str] = None,
+    ) -> None:
+        if boundary not in ("zero", "periodic"):
+            raise ValueError(f"unknown boundary condition {boundary!r}")
+        ir.verify_module(func)
+        self.func = func
+        self.boundary = boundary
+        self.name = name or func.sym_name
+        self.field_args = [
+            a for a in func.body.args if isinstance(a.type, stencil.FieldType)
+        ]
+        self.field_names = tuple(
+            field_names
+            if field_names is not None
+            else (f"field{i}" for i in range(len(self.field_args)))
+        )
+        if len(self.field_names) != len(self.field_args):
+            raise ValueError(
+                f"{len(self.field_names)} field names for "
+                f"{len(self.field_args)} field arguments"
+            )
+        # metadata is part of the identity: a cache hit must hand back an
+        # artifact whose .program matches in name/fields, not just in IR
+        self._salt = (
+            f"boundary={boundary}",
+            f"name={self.name}",
+            "fields=" + ",".join(self.field_names),
+        )
+        self.fingerprint = ir.fingerprint(func, *self._salt)
+
+    @property
+    def rank(self) -> int:
+        return self.field_args[0].type.bounds.rank if self.field_args else 0
+
+    @property
+    def output_fields(self) -> list:
+        """Field arguments that are stored to, in first-store order."""
+        return _stored_fields(self.func)
+
+    def ir_text(self) -> str:
+        """The stable textual IR (what the fingerprint hashes)."""
+        return ir.print_module(self.func)
+
+    def global_zeros(self, dtype=jnp.float32) -> list:
+        return [jnp.zeros(f.type.bounds.shape, dtype) for f in self.field_args]
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"Program({self.name!r}, rank={self.rank}, "
+            f"fields={list(self.field_names)}, boundary={self.boundary!r}, "
+            f"fingerprint={self.fingerprint})"
+        )
+
+
+# --------------------------------------------------------------------------
+# Target — where and how to compile
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """Frozen bundle of everything 'backend' about a compile.
+
+    ``mesh``/``strategy`` describe the decomposition (both ``None`` =
+    single device); ``backend`` picks the compute lowering; ``pipeline``
+    is an explicit pass spec (DESIGN.md §2 grammar) overriding the
+    ``fuse``/``cse``/``diagonal``/``overlap`` flags; the remaining knobs
+    control pallas codegen and jit wrapping.  Validation happens here, at
+    construction — a constructed Target either compiles or exposes a
+    program-shape mismatch (checked against the program in ``compile``).
+    """
+
+    mesh: Optional[Mesh] = None
+    strategy: Optional[SlicingStrategy] = None
+    backend: str = "jnp"  # "jnp" | "pallas"
+    pipeline: Optional[str] = None
+    fuse: bool = True
+    cse: bool = True
+    overlap: bool = False
+    diagonal: bool = False
+    pallas_interpret: bool = True  # CPU container: interpret kernels
+    pallas_tile: Optional[tuple] = None
+    # Donate every field buffer to jit (classic double-buffer rotation:
+    # the caller hands over ownership; inputs are invalidated after the
+    # call).  Off by default — only safe when the caller rotates buffers.
+    donate: bool = False
+    jit: bool = True
+
+    def __post_init__(self) -> None:
+        if self.backend not in ("jnp", "pallas"):
+            raise TargetError(
+                f"unknown backend {self.backend!r}; expected 'jnp' or 'pallas'"
+            )
+        if self.pallas_tile is not None:
+            object.__setattr__(self, "pallas_tile", tuple(self.pallas_tile))
+        if self.pipeline is not None:
+            from repro.core.passes import parse_pipeline
+
+            parse_pipeline(self.pipeline)  # raises PipelineError if malformed
+        s = self.strategy
+        if s is not None:
+            decomposed = [
+                (g, ax) for g, ax in zip(s.grid_shape, s.axis_names) if g > 1
+            ]
+            if decomposed and self.mesh is None:
+                raise TargetError(
+                    f"strategy decomposes over {[ax for _, ax in decomposed]} "
+                    "but no mesh was given"
+                )
+            for g, ax in decomposed:
+                if ax not in (self.mesh.axis_names if self.mesh else ()):
+                    raise TargetError(
+                        f"strategy axis {ax!r} not in mesh axes "
+                        f"{tuple(self.mesh.axis_names)}"
+                    )
+                if self.mesh.shape[ax] != g:
+                    raise TargetError(
+                        f"strategy grid size {g} on axis {ax!r} != mesh size "
+                        f"{self.mesh.shape[ax]}"
+                    )
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def auto(cls, ranks: Optional[int] = None, **overrides) -> "Target":
+        """Device discovery: decompose 1-D over the available devices
+        (or the first ``ranks`` of them); single-device target when only
+        one device exists."""
+        import numpy as np
+
+        from repro.core.passes.decompose import make_strategy_1d
+
+        devices = jax.devices()
+        n = len(devices) if ranks is None else int(ranks)
+        if n > len(devices):
+            raise TargetError(f"requested {n} ranks, have {len(devices)} devices")
+        if n <= 1:
+            return cls(**overrides)
+        return cls(
+            mesh=Mesh(np.array(devices[:n]), ("x",)),
+            strategy=make_strategy_1d(n),
+            **overrides,
+        )
+
+    # ------------------------------------------------------------------
+    def pipeline_spec(self) -> str:
+        """The pass-pipeline spec this target denotes (explicit ``pipeline``
+        or the canonical flag expansion, fig. 4): [fuse,cse] → decompose →
+        swap-elim → [diagonal] → [overlap] → lower-comm."""
+        if self.pipeline is not None:
+            return self.pipeline
+        stages: list[str] = []
+        if self.fuse:
+            stages.append("fuse")
+        if self.cse:
+            stages += ["cse", "dce"]
+        stages += ["decompose", "swap-elim"]
+        if self.diagonal:
+            stages.append("diagonal")
+        if self.overlap:
+            stages.append("overlap")
+        stages.append("lower-comm")
+        return ",".join(stages)
+
+    @property
+    def distributed(self) -> bool:
+        return self.mesh is not None and self.strategy is not None and any(
+            g > 1 for g in self.strategy.grid_shape
+        )
+
+    @property
+    def fingerprint(self) -> str:
+        mesh_desc = "none"
+        if self.mesh is not None:
+            mesh_desc = (
+                f"axes={tuple(self.mesh.axis_names)}"
+                f"shape={tuple(self.mesh.shape[a] for a in self.mesh.axis_names)}"
+                f"devices={tuple((d.platform, d.id) for d in self.mesh.devices.flat)}"
+            )
+        s = self.strategy
+        strat_desc = (
+            "none" if s is None
+            else f"grid={tuple(s.grid_shape)}axes={tuple(s.axis_names)}dims={tuple(s.dims)}"
+        )
+        text = "\n".join(
+            [
+                f"mesh={mesh_desc}",
+                f"strategy={strat_desc}",
+                f"backend={self.backend}",
+                f"pipeline={self.pipeline_spec()}",
+                f"pallas_interpret={self.pallas_interpret}",
+                f"pallas_tile={self.pallas_tile}",
+                f"donate={self.donate}",
+                f"jit={self.jit}",
+            ]
+        )
+        return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+# --------------------------------------------------------------------------
+# CompiledStencil — the reusable artifact
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineReport:
+    """What the pass pipeline did for one compile: the resolved spec and
+    per-pass wall-clock timings."""
+
+    spec: str
+    timings: tuple  # ((pass name, seconds), ...)
+
+    def __str__(self) -> str:
+        lines = [f"pipeline: {self.spec}"]
+        for name, sec in self.timings:
+            lines.append(f"  {name:<16} {sec * 1e3:8.2f} ms")
+        return "\n".join(lines)
+
+
+class CompiledStencil:
+    """A compiled stencil step: callable over *global* arrays, plus the
+    artifacts a user inspects — the rank-local comm-lowered IR, the
+    pipeline report, partition specs, AOT lowering and roofline cost."""
+
+    def __init__(
+        self,
+        program: Program,
+        target: Target,
+        strategy: SlicingStrategy,
+        local_ir: ir.FuncOp,
+        pipeline_report: PipelineReport,
+        fn: Callable,
+        partition_specs: tuple,
+        donate_argnums: tuple,
+        raw_fn: Callable,
+    ) -> None:
+        self.program = program
+        self.target = target
+        self.strategy = strategy
+        self.local_ir = local_ir
+        self.pipeline_report = pipeline_report
+        self.partition_specs = partition_specs
+        self.donate_argnums = donate_argnums
+        self._fn = fn
+        self._raw_fn = raw_fn  # pre-jit (shard_map'd) callable, for .lower()
+        self._out_indices = tuple(
+            program.field_args.index(f) for f in program.output_fields
+        )
+
+    # -- execution -------------------------------------------------------
+    def __call__(self, *arrays):
+        return self._fn(*arrays)
+
+    def step(self, dtype=None) -> Callable:
+        """A step over the *input* fields only: output buffers (fully
+        overwritten every call) are allocated internally — the shape
+        ``time_loop`` rotation wants."""
+        outs = set(self._out_indices)
+
+        def fn(*inputs):
+            it = iter(inputs)
+            dt = dtype or (inputs[0].dtype if inputs else jnp.float32)
+            args = [
+                jnp.zeros(f.type.bounds.shape, dt) if i in outs else next(it)
+                for i, f in enumerate(self.program.field_args)
+            ]
+            rest = list(it)
+            assert not rest, f"{len(rest)} extra input arrays"
+            return self._fn(*args)
+
+        return fn
+
+    def time_loop(self, state: Sequence[Any], n_steps: int, unroll: int = 1):
+        """Iterate the step ``n_steps`` times with time-buffer rotation
+        (``state`` ordered oldest→newest) under one ``lax.fori_loop``."""
+        return time_loop(self.step(), tuple(state), n_steps, unroll=unroll)
+
+    # -- inspection ------------------------------------------------------
+    def lower(self, dtype=jnp.float32):
+        """AOT-lower with ShapeDtypeStruct inputs (no allocation) — the
+        dry-run entry point: ``.lower().compile().memory_analysis()``."""
+        args = []
+        for f, spec in zip(self.program.field_args, self.partition_specs):
+            sharding = (
+                NamedSharding(self.target.mesh, spec)
+                if self.target.mesh is not None
+                else None
+            )
+            args.append(
+                jax.ShapeDtypeStruct(f.type.bounds.shape, dtype, sharding=sharding)
+            )
+        return jax.jit(self._raw_fn).lower(*args)
+
+    def cost(self, dtype=jnp.float32):
+        """Roofline terms of the compiled executable (launch/roofline):
+        per-device FLOPs / HBM bytes / collective bytes → seconds per
+        term, dominant bottleneck, overlapped/serial step time."""
+        from repro.launch.roofline import RooflineTerms, collective_bytes_from_hlo
+
+        compiled = self.lower(dtype).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+            cost = cost[0] if cost else {}
+        return RooflineTerms(
+            flops=cost.get("flops") or 0.0,
+            bytes_accessed=cost.get("bytes accessed") or 0.0,
+            collectives=collective_bytes_from_hlo(compiled.as_text()),
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"CompiledStencil({self.program.name!r}, "
+            f"backend={self.target.backend!r}, "
+            f"distributed={self.target.distributed}, "
+            f"pipeline={self.pipeline_report.spec!r})"
+        )
+
+
+# --------------------------------------------------------------------------
+# compile + the process-wide cache
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses}
+
+
+_CACHE: dict[tuple, Any] = {}
+_STATS = CacheStats()
+# Global lock guards the dicts only (held briefly); builds run under a
+# per-key lock, so concurrent compiles of the SAME key return the same
+# artifact ("second is first" is part of the contract) while unrelated
+# compiles — and the serve engine's per-request lookups — stay parallel.
+_LOCK = threading.RLock()
+_KEY_LOCKS: dict[tuple, threading.Lock] = {}
+
+
+def cache_stats() -> CacheStats:
+    """Process-wide compile-cache counters (shared by ``compile``,
+    ``lower_ir`` and ``cached_callable``)."""
+    return _STATS
+
+
+def clear_cache() -> None:
+    with _LOCK:
+        _CACHE.clear()
+        _KEY_LOCKS.clear()
+        _STATS.hits = 0
+        _STATS.misses = 0
+
+
+def _cached(key: tuple, build: Callable[[], Any]) -> Any:
+    with _LOCK:
+        if key in _CACHE:
+            _STATS.hits += 1
+            return _CACHE[key]
+        key_lock = _KEY_LOCKS.setdefault(key, threading.Lock())
+    with key_lock:
+        with _LOCK:
+            if key in _CACHE:  # built by the thread we waited on
+                _STATS.hits += 1
+                return _CACHE[key]
+        out = build()
+        with _LOCK:
+            _STATS.misses += 1
+            _CACHE[key] = out
+        return out
+
+
+def trivial_strategy(rank: int) -> SlicingStrategy:
+    names = ("x", "y", "z", "w")[:rank]
+    return SlicingStrategy((1,) * rank, names, tuple(range(rank)))
+
+
+def compile(program: Program, target: Optional[Target] = None) -> CompiledStencil:
+    """Compile ``program`` for ``target`` (default: single device).
+
+    Cached process-wide on ``(program.fingerprint, target.fingerprint)``:
+    a repeated compile of the same program + target returns the same
+    ``CompiledStencil`` without re-running the pass pipeline or
+    re-tracing, and its jit cache carries over."""
+    target = target or Target()
+    _validate_for_program(program, target)
+    # the fingerprint is taken at Program construction; a func mutated
+    # afterwards would poison the cache under a stale key — refuse it
+    if ir.fingerprint(program.func, *program._salt) != program.fingerprint:
+        raise ValueError(
+            f"Program {program.name!r}: IR was mutated after construction; "
+            "run rewrites on the FuncOp first, then wrap it in a Program"
+        )
+    key = ("compile", program.fingerprint, target.fingerprint)
+    return _cached(key, lambda: _build(program, target))
+
+
+def _validate_for_program(program: Program, target: Target) -> None:
+    s = target.strategy
+    if s is None:
+        return
+    for g, d in zip(s.grid_shape, s.dims):
+        if d >= program.rank:
+            raise TargetError(
+                f"strategy decomposes dim {d} of a rank-{program.rank} "
+                f"program {program.name!r}"
+            )
+        if g > 1:
+            for f in program.field_args:
+                extent = f.type.bounds.shape[d]
+                if extent % g != 0:
+                    raise TargetError(
+                        f"dim {d} extent {extent} of {program.name!r} not "
+                        f"divisible by grid size {g}"
+                    )
+
+
+def partition_specs(program: Program, strategy: SlicingStrategy) -> list:
+    """PartitionSpec per field argument, from the decomposition map."""
+    specs = []
+    for f in program.field_args:
+        rank = f.type.bounds.rank
+        entries: list = [None] * rank
+        for gax, d in enumerate(strategy.dims):
+            if d < rank and strategy.grid_shape[gax] > 1:
+                entries[d] = strategy.axis_names[gax]
+        specs.append(P(*entries))
+    return specs
+
+
+def _build(program: Program, target: Target) -> CompiledStencil:
+    strategy = target.strategy or trivial_strategy(program.rank)
+    spec = target.pipeline_spec()
+    ctx = PipelineContext(strategy=strategy, boundary=program.boundary)
+    pm = PassManager(build_pipeline(spec, ctx))
+    local = pm.run(_clone_func(program.func))
+    report = PipelineReport(spec=spec, timings=tuple(pm.timings))
+
+    distributed = target.distributed
+    axis_sizes = (
+        {name: target.mesh.shape[name] for name in target.mesh.axis_names}
+        if target.mesh is not None
+        else {}
+    )
+    interp = StencilInterpreter(
+        local,
+        axis_sizes=axis_sizes,
+        distributed=distributed,
+        backend=target.backend,
+        pallas_interpret=target.pallas_interpret,
+        pallas_tile=target.pallas_tile,
+    )
+    specs = partition_specs(program, strategy)
+    out_fields = program.output_fields
+    out_indices = tuple(program.field_args.index(f) for f in out_fields)
+
+    raw: Callable = interp
+    if distributed:
+        out_specs = tuple(specs[i] for i in out_indices)
+        from repro.dist.sharding import shard_map  # version-portable
+
+        raw = shard_map(
+            interp,
+            mesh=target.mesh,
+            in_specs=tuple(specs),
+            out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+            check_vma=False,  # pallas_call outputs carry no vma info
+        )
+    fn = raw
+    # the old StencilComputation computed this tuple but never passed it
+    # to jax.jit; donation is now honored (all field buffers — output
+    # buffers alias outputs, dead input time-buffers free their storage)
+    donate = (
+        tuple(range(len(program.field_args)))
+        if (target.donate and target.jit)
+        else ()
+    )
+    if target.jit:
+        fn = jax.jit(raw, donate_argnums=donate)
+    return CompiledStencil(
+        program=program,
+        target=target,
+        strategy=strategy,
+        local_ir=local,
+        pipeline_report=report,
+        fn=fn,
+        partition_specs=tuple(specs),
+        donate_argnums=donate,
+        raw_fn=raw,
+    )
+
+
+# --------------------------------------------------------------------------
+# Cache entry points for the other subsystems
+# --------------------------------------------------------------------------
+
+
+def lower_ir(
+    func: ir.FuncOp,
+    pipeline: str,
+    strategy: Optional[SlicingStrategy] = None,
+    boundary: str = "zero",
+) -> ir.FuncOp:
+    """Run a pass-pipeline spec over generated IR through the process-wide
+    cache (keyed on the IR fingerprint + spec) — how ``repro.dist``'s
+    sequence-halo exchanges skip re-lowering (`dist/context_parallel`)."""
+    s = strategy
+    strat_desc = (
+        "none" if s is None
+        else f"{tuple(s.grid_shape)}{tuple(s.axis_names)}{tuple(s.dims)}"
+    )
+    key = (
+        "lower_ir",
+        ir.fingerprint(func, f"boundary={boundary}"),
+        pipeline,
+        strat_desc,
+    )
+
+    def build() -> ir.FuncOp:
+        pm = PassManager(
+            build_pipeline(pipeline, PipelineContext(strategy=s, boundary=boundary))
+        )
+        return pm.run(_clone_func(func))
+
+    return _cached(key, build)
+
+
+def cached_callable(key: tuple, build: Callable[[], Callable]) -> Callable:
+    """Process-wide cache for compiled callables keyed by explicit
+    fingerprints — the serve engine keys its prefill/decode executables on
+    (model-config repr, bucket) so engine restarts skip re-tracing."""
+    return _cached(("callable",) + tuple(key), build)
+
+
+# --------------------------------------------------------------------------
+# Shared helpers (also used by the StencilComputation shim)
+# --------------------------------------------------------------------------
+
+
+def _stored_fields(func: ir.FuncOp) -> list:
+    out = []
+    for op in func.body.ops:
+        if isinstance(op, stencil.StoreOp) and op.field not in out:
+            out.append(op.field)
+    return out
+
+
+def _clone_func(func: ir.FuncOp) -> ir.FuncOp:
+    new = ir.FuncOp(func.sym_name, [a.type for a in func.body.args])
+    vmap: dict[ir.SSAValue, ir.SSAValue] = {}
+    for oa, na in zip(func.body.args, new.body.args):
+        vmap[oa] = na
+    for op in func.body.ops:
+        new.body.add_op(op.clone_into(vmap))
+    return new
+
+
+# --------------------------------------------------------------------------
+# Time-loop driver (paper benchmarks iterate stencils over timesteps)
+# --------------------------------------------------------------------------
+
+
+def time_loop(
+    step: Callable,
+    state: Sequence[Any],
+    n_steps: int,
+    unroll: int = 1,
+) -> tuple:
+    """Iterate ``step`` with time-buffer rotation.
+
+    ``state`` is ordered oldest→newest; each call consumes the full state
+    and produces the newest buffer(s), which rotate in:
+    ``state' = state[k:] + outs``.  Runs under ``lax.fori_loop`` so the
+    whole simulation is one XLA computation.
+    """
+    state = tuple(state)
+
+    def body(_, s):
+        outs = step(*s)
+        outs = outs if isinstance(outs, tuple) else (outs,)
+        return tuple(s[len(outs):]) + outs
+
+    return jax.lax.fori_loop(0, n_steps, body, state, unroll=unroll)

@@ -439,12 +439,20 @@ BINOP_REGISTRY: dict[str, Callable] = {}
 
 
 # --------------------------------------------------------------------------
-# Printing (for debugging and golden tests)
+# Printing (for debugging, golden tests, and fingerprinting)
 # --------------------------------------------------------------------------
 
 
 def print_module(root: Operation) -> str:
-    """Render an op tree in generic MLIR-ish syntax."""
+    """Render an op tree in generic MLIR-ish syntax.
+
+    The output is *stable*: value numbers are assigned in traversal order,
+    attributes print sorted by key, and every attribute is an immutable
+    dataclass with a deterministic repr — so two structurally identical op
+    trees print identically, and any op/operand/attribute difference shows
+    up in the text.  ``fingerprint`` builds content hashes on top of this;
+    keep the printer deterministic when extending it.
+    """
     lines: list[str] = []
     names: dict[SSAValue, str] = {}
     counter = itertools.count()
@@ -488,6 +496,23 @@ def print_module(root: Operation) -> str:
 
     go(root, 0)
     return "\n".join(lines)
+
+
+def fingerprint(root: Operation, *salt: str) -> str:
+    """Stable content hash of an op tree (plus optional salt strings).
+
+    Derived from the stable textual printer, so two structurally identical
+    trees hash equal and any op/operand/attribute change produces a
+    different hash.  This is the key the process-wide compile cache uses
+    (``repro.api``).
+    """
+    import hashlib
+
+    h = hashlib.sha256(print_module(root).encode())
+    for s in salt:
+        h.update(b"\x00")
+        h.update(s.encode())
+    return h.hexdigest()[:16]
 
 
 def verify_module(root: Operation) -> None:

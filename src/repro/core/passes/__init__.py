@@ -32,6 +32,13 @@ from repro.core import ir
 
 
 class PassManager:
+    # Process-wide counters: how many pipelines ran, and the timings of the
+    # most recent one.  ``repro.api``'s compile cache is judged against
+    # ``runs_completed`` (a cache hit must not bump it), and the
+    # ``python -m repro.core.passes`` dump surfaces ``last_timings``.
+    runs_completed: int = 0
+    last_timings: list = []
+
     def __init__(self, passes: Sequence[Callable], verify: bool = True) -> None:
         self.passes = list(passes)
         self.verify = verify
@@ -53,6 +60,8 @@ class PassManager:
                 ir.verify_module(func)
             if after_each is not None:
                 after_each(name, func)
+        PassManager.runs_completed += 1
+        PassManager.last_timings = list(self.timings)
         return func
 
 

@@ -13,7 +13,7 @@ import argparse
 import sys
 
 from repro.core import ir
-from repro.core.passes import PipelineContext, run_pipeline
+from repro.core.passes import PassManager, PipelineContext, run_pipeline
 
 DEFAULT_SPEC = (
     "fuse,cse,dce,decompose{grid=2x2},swap-elim,overlap,lower-comm"
@@ -77,10 +77,12 @@ def main(argv=None) -> int:
         print(f"\n// ----- after {name} " + "-" * (40 - len(name)))
         print(ir.print_module(f))
 
-    out, timings = run_pipeline(func, args.spec, ctx, after_each=dump)
+    out, _ = run_pipeline(func, args.spec, ctx, after_each=dump)
 
-    print("\n// pass timings")
-    for name, sec in timings:
+    # the process-wide surface every driver shares (shim: last_timings)
+    print(f"\n// pass timings (PassManager.last_timings, "
+          f"run #{PassManager.runs_completed})")
+    for name, sec in PassManager.last_timings:
         print(f"//   {name:<16} {sec * 1e3:8.2f} ms")
     counts: dict[str, int] = {}
     for op in out.body.ops:

@@ -1,36 +1,37 @@
-"""User-facing compilation API — the shared entry point all three
-frontends lower into (paper fig. 1b).
+"""DEPRECATED compile surface — thin shim over ``repro.api``.
 
-``StencilComputation`` wraps a global-domain stencil function and compiles
-it for a device mesh with a decomposition strategy:
+The user-facing API is now ``repro.api``'s three nouns (DESIGN.md §1):
 
-    comp = StencilComputation(func, boundary="periodic")
-    step = comp.compile(mesh=mesh, strategy=make_strategy_2d((4, 2)))
-    u1 = step(u0)                      # global arrays in, global arrays out
+    prog   = Program(func, boundary="periodic")       # or any frontend
+    target = Target(mesh=mesh, strategy=make_strategy_2d((4, 2)))
+    step   = repro.api.compile(prog, target)          # CompiledStencil
 
-The pipeline is the paper's: [fusion + cse] → decompose (dmp.swap
-insertion) → redundant-swap elimination → [overlap / diagonal rewrites] →
-lowering to shard_map + ppermute + (jnp | pallas) compute.
+``StencilComputation`` and ``CompileOptions`` are kept so existing call
+sites keep working bitwise-identically; they delegate to the new surface
+(and therefore share its process-wide compile cache).  New code should
+not use them.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Any, Callable, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
+from repro import api
+from repro.api import time_loop, trivial_strategy  # noqa: F401  (legacy import path)
 from repro.core import ir
-from repro.core.dialects import stencil
-from repro.core.lowering import StencilInterpreter
 from repro.core.passes import PassManager, PipelineContext, build_pipeline
 from repro.core.passes.decompose import SlicingStrategy
 
 
 @dataclasses.dataclass
 class CompileOptions:
+    """DEPRECATED flag bundle — the fields of ``repro.api.Target`` minus
+    mesh/strategy.  Kept for source compatibility."""
+
     backend: str = "jnp"  # "jnp" | "pallas"
     fuse: bool = True
     cse: bool = True
@@ -41,44 +42,66 @@ class CompileOptions:
     comm_dialect: bool = False
     pallas_interpret: bool = True  # CPU container: interpret kernels
     pallas_tile: Optional[tuple] = None
-    donate: bool = True
+    # Buffer donation (whole-state handover).  The old implementation
+    # computed donate_argnums but never passed them to jax.jit, so the
+    # honored default is False; opt in when the caller rotates buffers.
+    donate: bool = False
     # Explicit pipeline spec (DESIGN.md §2 grammar); overrides the
     # fuse/cse/diagonal/overlap flags when set.
     pipeline: Optional[str] = None
 
+    def __post_init__(self) -> None:
+        if self.comm_dialect:
+            warnings.warn(
+                "CompileOptions.comm_dialect is a deprecated no-op: the "
+                "dmp→comm lowering is the canonical path and always runs; "
+                "use an explicit pipeline spec instead",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+
+    def to_target(
+        self,
+        mesh: Optional[Mesh] = None,
+        strategy: Optional[SlicingStrategy] = None,
+        jit: bool = True,
+    ) -> api.Target:
+        return api.Target(
+            mesh=mesh,
+            strategy=strategy,
+            backend=self.backend,
+            pipeline=self.pipeline,
+            fuse=self.fuse,
+            cse=self.cse,
+            overlap=self.overlap,
+            diagonal=self.diagonal,
+            pallas_interpret=self.pallas_interpret,
+            pallas_tile=self.pallas_tile,
+            donate=self.donate,
+            jit=jit,
+        )
+
 
 def default_pipeline(opts: "CompileOptions") -> str:
-    """The canonical pipeline spec the option flags denote (fig. 4):
-    [fuse,cse] → decompose → swap-elim → [diagonal] → [overlap] →
-    lower-comm.  Always ends in the dmp→comm lowering — the interpreter
-    executes comm ops only."""
-    stages: list[str] = []
-    if opts.fuse:
-        stages.append("fuse")
-    if opts.cse:
-        stages += ["cse", "dce"]
-    stages += ["decompose", "swap-elim"]
-    if opts.diagonal:
-        stages.append("diagonal")
-    if opts.overlap:
-        stages.append("overlap")
-    stages.append("lower-comm")
-    return ",".join(stages)
-
-
-def trivial_strategy(rank: int) -> SlicingStrategy:
-    names = ("x", "y", "z", "w")[:rank]
-    return SlicingStrategy((1,) * rank, names, tuple(range(rank)))
+    """The canonical pipeline spec the option flags denote (fig. 4)."""
+    return opts.to_target().pipeline_spec()
 
 
 class StencilComputation:
+    """DEPRECATED shim: wraps a ``repro.api.Program`` and delegates every
+    compile to ``repro.api.compile`` — one compile path, one cache."""
+
     def __init__(self, func: ir.FuncOp, boundary: str = "zero") -> None:
-        ir.verify_module(func)
-        self.func = func
+        warnings.warn(
+            "StencilComputation is deprecated; use repro.api.Program / "
+            "Target / compile (see DESIGN.md §1 migration table)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        self.program = api.Program(func, boundary=boundary)
+        self.func = self.program.func
         self.boundary = boundary
-        self.field_args = [
-            a for a in func.body.args if isinstance(a.type, stencil.FieldType)
-        ]
+        self.field_args = list(self.program.field_args)
         self.last_local: Optional[ir.FuncOp] = None  # for inspection/tests
         self.last_pipeline: Optional[str] = None
         self.last_timings: list = []  # (pass name, seconds) per stage
@@ -90,16 +113,14 @@ class StencilComputation:
         options: Optional[CompileOptions] = None,
     ) -> ir.FuncOp:
         """Run the shared pass pipeline; returns the rank-local,
-        comm-lowered function (no dmp.swap survives — the canonical
-        dmp→comm path is the only one)."""
+        comm-lowered function.  (Unlike ``compile``, accepts a decomposed
+        strategy without a mesh — IR-only inspection.)"""
         opts = options or CompileOptions()
-        rank = self.field_args[0].type.bounds.rank if self.field_args else 1
-        strategy = strategy or trivial_strategy(rank)
-
+        strategy = strategy or trivial_strategy(self.program.rank)
         spec = opts.pipeline or default_pipeline(opts)
         ctx = PipelineContext(strategy=strategy, boundary=self.boundary)
         pm = PassManager(build_pipeline(spec, ctx))
-        local = pm.run(_clone_func(self.func))
+        local = pm.run(api._clone_func(self.func))
         self.last_local = local
         self.last_pipeline = spec
         self.last_timings = list(pm.timings)
@@ -113,60 +134,19 @@ class StencilComputation:
         options: Optional[CompileOptions] = None,
         jit: bool = True,
     ) -> Callable:
-        """Compile to a callable over *global* arrays."""
+        """Compile to a callable over *global* arrays (a CompiledStencil)."""
         opts = options or CompileOptions()
-        rank = self.field_args[0].type.bounds.rank if self.field_args else 1
-        strategy = strategy or trivial_strategy(rank)
-        local = self.prepare_local(strategy, opts)
-
-        distributed = mesh is not None and any(s > 1 for s in strategy.grid_shape)
-        axis_sizes = (
-            {name: mesh.shape[name] for name in mesh.axis_names} if mesh else {}
+        artifact = api.compile(
+            self.program, opts.to_target(mesh=mesh, strategy=strategy, jit=jit)
         )
-        interp = StencilInterpreter(
-            local,
-            axis_sizes=axis_sizes,
-            distributed=distributed,
-            backend=opts.backend,
-            pallas_interpret=opts.pallas_interpret,
-            pallas_tile=opts.pallas_tile,
-        )
-        if not distributed:
-            fn = interp
-            if jit:
-                fn = jax.jit(interp)
-            return fn
-
-        specs = self.partition_specs(strategy)
-        out_specs = tuple(
-            specs[self.field_args.index(f)] for f in _stored_fields(self.func, self.field_args)
-        )
-        from repro.dist.sharding import shard_map  # version-portable
-
-        sharded = shard_map(
-            interp,
-            mesh=mesh,
-            in_specs=tuple(specs),
-            out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
-            check_vma=False,  # pallas_call outputs carry no vma info
-        )
-        if jit:
-            donate = tuple(range(len(specs))) if opts.donate else ()
-            sharded = jax.jit(sharded)
-        return sharded
+        self.last_local = artifact.local_ir
+        self.last_pipeline = artifact.pipeline_report.spec
+        self.last_timings = list(artifact.pipeline_report.timings)
+        return artifact
 
     # ------------------------------------------------------------------
     def partition_specs(self, strategy: SlicingStrategy) -> list:
-        """PartitionSpec per field argument, from the decomposition map."""
-        specs = []
-        for f in self.field_args:
-            rank = f.type.bounds.rank
-            entries: list = [None] * rank
-            for gax, d in enumerate(strategy.dims):
-                if d < rank and strategy.grid_shape[gax] > 1:
-                    entries[d] = strategy.axis_names[gax]
-            specs.append(P(*entries))
-        return specs
+        return api.partition_specs(self.program, strategy)
 
     # ------------------------------------------------------------------
     def lower(
@@ -178,64 +158,23 @@ class StencilComputation:
     ):
         """AOT-lower for the dry-run: ShapeDtypeStruct inputs, no allocation."""
         opts = options or CompileOptions()
-        fn = self.compile(mesh, strategy, opts, jit=False)
-        specs = self.partition_specs(strategy)
-        args = [
-            jax.ShapeDtypeStruct(
-                f.type.bounds.shape,
-                dtype,
-                sharding=NamedSharding(mesh, spec),
-            )
-            for f, spec in zip(self.field_args, specs)
-        ]
-        return jax.jit(fn).lower(*args)
+        artifact = api.compile(
+            self.program, opts.to_target(mesh=mesh, strategy=strategy)
+        )
+        self.last_local = artifact.local_ir
+        self.last_pipeline = artifact.pipeline_report.spec
+        self.last_timings = list(artifact.pipeline_report.timings)
+        return artifact.lower(dtype=dtype)
 
     # ------------------------------------------------------------------
     def global_zeros(self, dtype=jnp.float32) -> list:
-        return [jnp.zeros(f.type.bounds.shape, dtype) for f in self.field_args]
+        return self.program.global_zeros(dtype)
 
 
-def _stored_fields(func: ir.FuncOp, field_args: Sequence[ir.SSAValue]) -> list:
-    out = []
-    for op in func.body.ops:
-        if isinstance(op, stencil.StoreOp) and op.field not in out:
-            out.append(op.field)
-    return out
+def _stored_fields(func: ir.FuncOp, field_args: Sequence[Any] = ()) -> list:
+    # legacy helper signature; field_args was never needed
+    return api._stored_fields(func)
 
 
 def _clone_func(func: ir.FuncOp) -> ir.FuncOp:
-    new = ir.FuncOp(func.sym_name, [a.type for a in func.body.args])
-    vmap: dict[ir.SSAValue, ir.SSAValue] = {}
-    for oa, na in zip(func.body.args, new.body.args):
-        vmap[oa] = na
-    for op in func.body.ops:
-        new.body.add_op(op.clone_into(vmap))
-    return new
-
-
-# --------------------------------------------------------------------------
-# Time-loop driver (paper benchmarks iterate stencils over timesteps)
-# --------------------------------------------------------------------------
-
-
-def time_loop(
-    step: Callable,
-    state: Sequence[Any],
-    n_steps: int,
-    unroll: int = 1,
-) -> tuple:
-    """Iterate ``step`` with time-buffer rotation.
-
-    ``state`` is ordered oldest→newest; each call consumes the full state
-    and produces the newest buffer(s), which rotate in:
-    ``state' = state[k:] + outs``.  Runs under ``lax.fori_loop`` so the
-    whole simulation is one XLA computation.
-    """
-    state = tuple(state)
-
-    def body(_, s):
-        outs = step(*s)
-        outs = outs if isinstance(outs, tuple) else (outs,)
-        return tuple(s[len(outs):]) + outs
-
-    return jax.lax.fori_loop(0, n_steps, body, state, unroll=unroll)
+    return api._clone_func(func)

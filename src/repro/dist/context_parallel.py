@@ -33,9 +33,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import api
 from repro.core import ir
 from repro.core.dialects import dmp, stencil
-from repro.core.lowering import lower_dmp_to_comm, run_func_dataflow
+from repro.core.lowering import run_func_dataflow
 from repro.core.passes.decompose import make_strategy_1d
 from repro.dist.sharding import shard_map
 
@@ -89,8 +90,15 @@ def _build_swap_func(local_shape: tuple, spec: SeqHaloSpec) -> ir.FuncOp:
 @lru_cache(maxsize=128)
 def _comm_func(local_shape: tuple, spec: SeqHaloSpec) -> ir.FuncOp:
     """The exchange after the shared dmp→comm lowering (paper fig. 4):
-    ``comm.halo_pad`` + per-round ``comm.exchange_start``/``comm.wait``."""
-    return lower_dmp_to_comm(_build_swap_func(local_shape, spec))
+    ``comm.halo_pad`` + per-round ``comm.exchange_start``/``comm.wait``.
+
+    Lowered through ``repro.api``'s process-wide fingerprint-keyed cache
+    — the same cache stencil compiles use, visible in
+    ``repro.api.cache_stats()`` — with a thin shape-keyed lru memo on
+    top so the per-trace hot path skips even the IR build + hash."""
+    return api.lower_ir(
+        _build_swap_func(local_shape, spec), "lower-comm", boundary=spec.boundary
+    )
 
 
 def comm_ir_text(local_shape: tuple, spec: SeqHaloSpec) -> str:

@@ -4,6 +4,8 @@
 - ``psyclone_like`` — loop-nest kernels with *stencil recognition*;
 - ``oec_like``      — direct stencil-dialect construction.
 
-All three emit the same ``stencil`` IR and compile through
-``repro.core.program.StencilComputation``.
+All three emit the same ``stencil`` IR as a ``repro.api.Program``
+(``Operator.program`` / ``recognize(...)`` / ``ProgramBuilder.finish()``)
+and compile through the one shared surface ``repro.api.compile(program,
+target)``.
 """

@@ -22,10 +22,12 @@ from typing import Optional, Sequence, Union
 import jax
 import jax.numpy as jnp
 
+from repro import api
+from repro.api import Program, Target
 from repro.core import fd, ir
 from repro.core.builder import ApplyArgHandle, Expr, IRBuilder, build_apply
 from repro.core.dialects import stencil
-from repro.core.program import CompileOptions, StencilComputation, time_loop
+from repro.core.program import CompileOptions, time_loop
 from repro.core.passes.decompose import SlicingStrategy
 
 
@@ -269,7 +271,12 @@ class Operator:
             )
         func.body.add_op(ir.ReturnOp([]))
         self.func = func
-        self.computation = StencilComputation(func, boundary=self.boundary)
+        names = [f"{fn_.name}@t{t:+d}" for fn_, t in self.arg_layout] + [
+            f"{fn_.name}@t+1" for fn_ in updated
+        ]
+        self.program = Program(
+            func, boundary=self.boundary, field_names=names, name=func.sym_name
+        )
 
     def _expand(self, n: Node, ctx_fn: TimeFunction) -> Node:
         """Expand Deriv nodes into FD tap combinations."""
@@ -312,23 +319,50 @@ class Operator:
         return n
 
     # -- execution --------------------------------------------------------
+    @property
+    def computation(self):
+        """DEPRECATED: the old StencilComputation shim over ``.program``
+        (built lazily, once — its last_local/last_timings state persists
+        across accesses like the old stored attribute did)."""
+        if getattr(self, "_computation", None) is None:
+            from repro.core.program import StencilComputation
+
+            self._computation = StencilComputation(
+                self.func, boundary=self.boundary
+            )
+        return self._computation
+
+    def _target(
+        self,
+        mesh=None,
+        strategy: Optional[SlicingStrategy] = None,
+        options: Optional[CompileOptions] = None,
+        target: Optional[Target] = None,
+    ) -> Target:
+        if target is not None:
+            if mesh is not None or strategy is not None or options is not None:
+                raise ValueError(
+                    "pass either target= or the legacy mesh/strategy/options, "
+                    "not both"
+                )
+            return target
+        opts = options or CompileOptions()
+        return opts.to_target(mesh=mesh, strategy=strategy)
+
     def compile_step(
         self,
         mesh=None,
         strategy: Optional[SlicingStrategy] = None,
         options: Optional[CompileOptions] = None,
+        target: Optional[Target] = None,
     ):
         """Step over the *input* time buffers only; output buffers (fully
-        overwritten every step) are supplied internally."""
-        raw = self.computation.compile(mesh=mesh, strategy=strategy, options=options)
-        n_out = len(self.updates)
-        shape = self.grid.shape
-
-        def step(*inputs):
-            outs = tuple(jnp.zeros(shape, inputs[0].dtype) for _ in range(n_out))
-            return raw(*inputs, *outs)
-
-        return step
+        overwritten every step) are supplied internally.  Prefer
+        ``target=``; mesh/strategy/options are the legacy spelling."""
+        artifact = api.compile(
+            self.program, self._target(mesh, strategy, options, target)
+        )
+        return artifact.step()
 
     def zero_state(self, dtype=jnp.float32) -> list:
         return [
@@ -342,9 +376,10 @@ class Operator:
         mesh=None,
         strategy: Optional[SlicingStrategy] = None,
         options: Optional[CompileOptions] = None,
+        target: Optional[Target] = None,
     ):
         """Run ``timesteps`` with time-buffer rotation (oldest→newest)."""
-        step = self.compile_step(mesh, strategy, options)
+        step = self.compile_step(mesh, strategy, options, target)
         return time_loop(step, tuple(state), timesteps)
 
 

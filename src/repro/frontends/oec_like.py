@@ -8,16 +8,17 @@
     r = p.apply([t], lambda b, u: (u.at(-1, 0) + u.at(1, 0)
                                    + u.at(0, -1) + u.at(0, 1)) * 0.25)
     p.store(r, out)
-    comp = p.finish(boundary="periodic")
+    prog = p.finish(boundary="periodic")          # repro.api.Program
+    step = repro.api.compile(prog, target)
 """
 from __future__ import annotations
 
 from typing import Callable, Optional, Sequence
 
+from repro.api import Program
 from repro.core import ir
 from repro.core.builder import build_apply
 from repro.core.dialects import stencil
-from repro.core.program import StencilComputation
 
 
 class ProgramBuilder:
@@ -92,8 +93,13 @@ class ProgramBuilder:
         ir.verify_module(func)
         return func
 
-    def finish(self, boundary: str = "zero") -> StencilComputation:
-        return StencilComputation(self.build_func(), boundary=boundary)
+    def finish(self, boundary: str = "zero") -> Program:
+        return Program(
+            self.build_func(),
+            boundary=boundary,
+            field_names=tuple(self._arg_names),
+            name=self.name,
+        )
 
 
 class _Token:

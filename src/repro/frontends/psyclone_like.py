@@ -12,7 +12,8 @@ and recognition happens on the Python AST:
         sv[i, j, k] = v[i, j, k] * (w[i, j, k + 1] - w[i, j - 1, k]) * 0.5
         sw[i, j, k] = w[i, j, k] * (u[i, j, k] + v[i, j, k])
 
-    prog = recognize(pw_advect, shape=(64, 64, 32))
+    prog = recognize(pw_advect, shape=(64, 64, 32))   # repro.api.Program
+    step = repro.api.compile(prog, target)
 
 Index expressions must be loop indices ± integer constants — exactly the
 affine accesses PSyclone's stencil recognizer accepts.  Assignments to a
@@ -28,10 +29,10 @@ import inspect
 import textwrap
 from typing import Callable, Optional, Sequence
 
+from repro.api import Program
 from repro.core import ir
 from repro.core.builder import ApplyArgHandle, Expr, IRBuilder, build_apply
 from repro.core.dialects import stencil
-from repro.core.program import StencilComputation
 
 _INDEX_NAMES = ("i", "j", "k", "l")
 
@@ -44,10 +45,19 @@ def recognize(
     kernel: Callable,
     shape: Sequence[int],
     boundary: str = "zero",
-) -> StencilComputation:
-    """Build a StencilComputation from a loop-style kernel function."""
+) -> Program:
+    """Recognize a loop-style kernel function into a ``repro.api.Program``."""
     func_ir = build_stencil_func(kernel, shape)
-    return StencilComputation(func_ir, boundary=boundary)
+    names = [
+        a.name_hint for a in func_ir.body.args
+        if isinstance(a.type, stencil.FieldType)
+    ]
+    return Program(
+        func_ir,
+        boundary=boundary,
+        field_names=names,
+        name=func_ir.sym_name,
+    )
 
 
 def build_stencil_func(kernel: Callable, shape: Sequence[int]) -> ir.FuncOp:
@@ -97,6 +107,8 @@ def build_stencil_func(kernel: Callable, shape: Sequence[int]) -> ir.FuncOp:
         f"psy_{kernel.__name__}",
         [stencil.FieldType(core) for _ in arg_names],
     )
+    for n, a in zip(arg_names, func.body.args):
+        a.name_hint = n
     field_of = {n: a for n, a in zip(arg_names, func.body.args)}
 
     # value environment: name -> temp SSA value (loaded field or apply result)

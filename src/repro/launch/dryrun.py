@@ -18,7 +18,6 @@ a JSON record to ``results/dryrun/<cell>.json``.
 """
 import argparse  # noqa: E402
 import json  # noqa: E402
-import re  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 
@@ -28,46 +27,11 @@ from repro.configs import LM_SHAPES, get_config, get_shape  # noqa: E402
 from repro.configs.registry import ARCHS, shape_applicable  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.steps import build_step  # noqa: E402
+
+# Shared with repro.api's CompiledStencil.cost(); lives in roofline.py
+# because importing this module forces the 512-device XLA flag.
+from repro.launch.roofline import collective_bytes_from_hlo  # noqa: E402,F401
 from repro.dist.sharding import default_rules  # noqa: E402
-
-
-COLLECTIVE_RE = re.compile(
-    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-)
-
-
-def collective_bytes_from_hlo(hlo_text: str) -> dict:
-    """Sum operand bytes of every collective in the (optimized) HLO."""
-    out: dict[str, float] = {}
-    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
-
-    def shape_bytes(sig: str) -> float:
-        total = 0.0
-        for m in shape_re.finditer(sig):
-            dt, dims = m.group(1), m.group(2)
-            sz = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
-                  "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8}.get(dt)
-            if sz is None:
-                continue
-            n = 1
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-            total += n * sz
-        return total
-
-    for line in hlo_text.splitlines():
-        m = COLLECTIVE_RE.search(line)
-        if not m or "=" not in line:
-            continue
-        kind = m.group(1)
-        # operand bytes: shapes on the RHS of the op name
-        rhs = line.split("=", 1)[1]
-        # result shape is the first shape on the RHS; operands follow in parens
-        paren = rhs.find("(")
-        operand_sig = rhs[paren:] if paren >= 0 else rhs
-        out[kind] = out.get(kind, 0.0) + shape_bytes(operand_sig)
-    return out
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,

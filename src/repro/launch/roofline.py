@@ -26,11 +26,114 @@ import argparse
 import glob
 import json
 import os
-from dataclasses import dataclass
+import re
+from dataclasses import dataclass, field
 
 PEAK_FLOPS = 197e12   # bf16 / chip
 HBM_BW = 819e9        # bytes/s / chip
 LINK_BW = 50e9        # bytes/s / ICI link
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective in the (optimized) HLO."""
+    out: dict[str, float] = {}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+
+    def shape_bytes(sig: str) -> float:
+        total = 0.0
+        for m in shape_re.finditer(sig):
+            dt, dims = m.group(1), m.group(2)
+            sz = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                  "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8}.get(dt)
+            if sz is None:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * sz
+        return total
+
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        # operand bytes: shapes on the RHS of the op name
+        rhs = line.split("=", 1)[1]
+        # result shape is the first shape on the RHS; operands follow in parens
+        paren = rhs.find("(")
+        operand_sig = rhs[paren:] if paren >= 0 else rhs
+        out[kind] = out.get(kind, 0.0) + shape_bytes(operand_sig)
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    """Generic three-term roofline of one compiled executable — the
+    ``CompiledStencil.cost()`` payload (per-device quantities in, per-chip
+    seconds out)."""
+
+    flops: float
+    bytes_accessed: float
+    collectives: dict = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self.flops = float(self.flops)
+        self.bytes_accessed = float(self.bytes_accessed)
+        self.collectives = dict(self.collectives)
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(self.collectives.values()))
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_overlapped(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def t_serial(self) -> float:
+        return self.t_compute + self.t_memory + self.t_collective
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "t_overlapped": self.t_overlapped,
+            "t_serial": self.t_serial,
+            "dominant": self.dominant,
+        }
+
+
 
 SHAPE_TOKENS = {
     "train_4k": 4_096 * 256,

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs.base import ModelConfig
 from repro.models import lm
 
@@ -75,12 +76,19 @@ class Engine:
         self.last_token = jnp.zeros((ecfg.max_slots,), jnp.int32)
         self.live = np.zeros((ecfg.max_slots,), bool)
 
-        self._decode = jax.jit(
-            lambda params, tok, pos, cache: lm.decode_step(
-                params, cfg, tok, pos, cache
-            )
+        # Compiled executables come from repro.api's process-wide cache,
+        # keyed on the model-config fingerprint (+ bucket): a new Engine
+        # over the same config reuses the already-traced decode/prefill
+        # callables instead of re-jitting them.
+        self._cfg_fp = repr(cfg)
+        self._decode = api.cached_callable(
+            ("serve-decode", self._cfg_fp),
+            lambda: jax.jit(
+                lambda params, tok, pos, cache: lm.decode_step(
+                    params, cfg, tok, pos, cache
+                )
+            ),
         )
-        self._prefill = {}  # bucket -> jitted fn
 
     # -- public API --------------------------------------------------------
     def add_request(self, prompt: list) -> int:
@@ -131,14 +139,15 @@ class Engine:
 
     # -- internals ----------------------------------------------------------
     def _prefill_fn(self, bucket: int) -> Callable:
-        if bucket not in self._prefill:
-            cfg = self.cfg
+        cfg = self.cfg
 
+        def build() -> Callable:
             def fn(params, toks):
                 return lm.forward_prefill(params, cfg, toks, q_chunk=min(bucket, 512))
 
-            self._prefill[bucket] = jax.jit(fn)
-        return self._prefill[bucket]
+            return jax.jit(fn)
+
+        return api.cached_callable(("serve-prefill", self._cfg_fp, bucket), build)
 
     def _needs_exact_prefill(self) -> bool:
         """Right-padded prefill poisons ring windows and recurrent states;

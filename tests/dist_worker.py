@@ -23,7 +23,7 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
-from repro.core.program import CompileOptions, StencilComputation  # noqa: E402
+from repro.api import Target, compile as api_compile  # noqa: E402
 from repro.core.passes.decompose import (  # noqa: E402
     make_strategy_1d,
     make_strategy_2d,
@@ -89,11 +89,11 @@ def check(name, got, want, tol=0.0):
     print(f"ok: {name}")
 
 
-def run_single(builder_fn, shape, boundary, **opts):
-    comp = builder_fn(shape).finish(boundary=boundary)
+def run_single(builder_fn, shape, boundary):
+    prog = builder_fn(shape).finish(boundary=boundary)
     rng = np.random.default_rng(42)
     u0 = rng.standard_normal(shape).astype(np.float32)
-    ref = comp.compile(options=CompileOptions())(u0, np.zeros_like(u0))
+    ref = api_compile(prog)(u0, np.zeros_like(u0))
     return u0, np.asarray(ref[0])
 
 
@@ -101,8 +101,8 @@ def scenario_1d(boundary):
     shape = (64, 32)
     u0, want = run_single(_jacobi, shape, boundary)
     mesh = _mesh((8,), ("x",))
-    comp = _jacobi(shape).finish(boundary=boundary)
-    step = comp.compile(mesh=mesh, strategy=make_strategy_1d(8))
+    prog = _jacobi(shape).finish(boundary=boundary)
+    step = api_compile(prog, Target(mesh=mesh, strategy=make_strategy_1d(8)))
     got = step(u0, np.zeros(shape, np.float32))
     # fp32 stencil: distribution must be bitwise-identical
     check(f"1d-{boundary}", got[0], want)
@@ -112,8 +112,8 @@ def scenario_2d(boundary):
     shape = (32, 64)
     u0, want = run_single(_jacobi, shape, boundary)
     mesh = _mesh((4, 2), ("x", "y"))
-    comp = _jacobi(shape).finish(boundary=boundary)
-    step = comp.compile(mesh=mesh, strategy=make_strategy_2d((4, 2)))
+    prog = _jacobi(shape).finish(boundary=boundary)
+    step = api_compile(prog, Target(mesh=mesh, strategy=make_strategy_2d((4, 2))))
     got = step(u0, np.zeros(shape, np.float32))
     check(f"2d-{boundary}", got[0], want)
 
@@ -122,8 +122,8 @@ def scenario_3d():
     shape = (16, 16, 32)
     u0, want = run_single(_jacobi, shape, "periodic")
     mesh = _mesh((2, 2, 2), ("x", "y", "z"))
-    comp = _jacobi(shape).finish(boundary="periodic")
-    step = comp.compile(mesh=mesh, strategy=make_strategy_3d((2, 2, 2)))
+    prog = _jacobi(shape).finish(boundary="periodic")
+    step = api_compile(prog, Target(mesh=mesh, strategy=make_strategy_3d((2, 2, 2))))
     got = step(u0, np.zeros(shape, np.float32))
     check("3d-periodic", got[0], want)
 
@@ -134,31 +134,34 @@ def scenario_box(diagonal):
     shape = (32, 32)
     u0, want = run_single(_box, shape, "periodic")
     mesh = _mesh((2, 2), ("x", "y"))
-    comp = _box(shape).finish(boundary="periodic")
-    step = comp.compile(
-        mesh=mesh,
-        strategy=make_strategy_2d((2, 2)),
-        options=CompileOptions(diagonal=diagonal),
+    prog = _box(shape).finish(boundary="periodic")
+    step = api_compile(
+        prog,
+        Target(mesh=mesh, strategy=make_strategy_2d((2, 2)), diagonal=diagonal),
     )
     got = step(u0, np.zeros(shape, np.float32))
     check(f"box-diagonal={diagonal}", got[0], want)
 
 
 def scenario_options(opt):
-    """overlap / comm_dialect / pallas backend under distribution."""
+    """overlap / explicit pipeline spec / pallas backend under distribution."""
     shape = (32, 64)
     u0, want = run_single(_jacobi, shape, "periodic")
     mesh = _mesh((4, 2), ("x", "y"))
-    comp = _jacobi(shape).finish(boundary="periodic")
+    prog = _jacobi(shape).finish(boundary="periodic")
     kw = {}
     tol = 0.0
     if opt == "pallas":
         kw["backend"] = "pallas"
         tol = 1e-6
+    elif opt == "pipeline-spec":
+        # the canonical spec written out explicitly (replaces the removed
+        # comm_dialect flag): must equal the flag-denoted default pipeline
+        kw["pipeline"] = "fuse,cse,dce,decompose,swap-elim,lower-comm"
     else:
         kw[opt] = True
-    step = comp.compile(
-        mesh=mesh, strategy=make_strategy_2d((4, 2)), options=CompileOptions(**kw)
+    step = api_compile(
+        prog, Target(mesh=mesh, strategy=make_strategy_2d((4, 2)), **kw)
     )
     got = step(u0, np.zeros(shape, np.float32))
     check(f"options-{opt}", got[0], want, tol=tol)
@@ -173,10 +176,11 @@ def scenario_overlap_matrix(boundary, builder="jacobi", diagonal=False,
     builder_fn = _jacobi if builder == "jacobi" else _box
     u0, want = run_single(builder_fn, shape, boundary)
     mesh = _mesh((2, 2), ("x", "y"))
-    comp = builder_fn(shape).finish(boundary=boundary)
-    opts = CompileOptions(overlap=True, diagonal=diagonal, backend=backend)
-    step = comp.compile(
-        mesh=mesh, strategy=make_strategy_2d((2, 2)), options=opts
+    prog = builder_fn(shape).finish(boundary=boundary)
+    step = api_compile(
+        prog,
+        Target(mesh=mesh, strategy=make_strategy_2d((2, 2)),
+               overlap=True, diagonal=diagonal, backend=backend),
     )
     got = step(u0, np.zeros(shape, np.float32))
     tol = 1e-6 if backend == "pallas" else 0.0
@@ -187,7 +191,7 @@ def scenario_overlap_matrix(boundary, builder="jacobi", diagonal=False,
     # the overlap structure must be visible in the lowered IR
     from repro.core.dialects import comm, stencil
 
-    names = [op.name for op in comp.last_local.body.ops]
+    names = [op.name for op in step.local_ir.body.ops]
     assert "comm.exchange_start" in names and "stencil.combine" in names, names
     first_apply = names.index("stencil.apply")
     assert names.index("comm.exchange_start") < first_apply < names.index(
@@ -248,7 +252,7 @@ SCENARIOS = {
     "overlap-pallas": lambda: scenario_overlap_matrix(
         "periodic", backend="pallas"
     ),
-    "comm_dialect": lambda: scenario_options("comm_dialect"),
+    "pipeline-spec": lambda: scenario_options("pipeline-spec"),
     "pallas": lambda: scenario_options("pallas"),
     "wide-halo": scenario_wide_halo,
     "time-loop": scenario_time_loop,

@@ -1,0 +1,366 @@
+"""The one compile surface: Program / Target / CompiledStencil.
+
+Covers Target validation (construction-time rejection), IR fingerprint
+stability, the process-wide fingerprint-keyed compile cache (hit/miss
+counters + pass pipeline not re-running), buffer donation, and the
+acceptance property that all three frontends compile through
+``repro.api.compile`` with one shared Target — with the deprecated
+``StencilComputation`` shim staying bitwise-equivalent.
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro import api
+from repro.api import CompiledStencil, Program, Target, TargetError
+from repro.core import ir
+from repro.core.passes import PassManager
+from repro.core.passes.decompose import SlicingStrategy, make_strategy_1d
+from repro.frontends.oec_like import ProgramBuilder
+
+
+def _jacobi_prog(shape=(16, 16), boundary="periodic", name="jacobi"):
+    p = ProgramBuilder(name, shape)
+    u = p.input("u")
+    out = p.output("out")
+    t = p.load(u)
+    r = p.apply(
+        [t],
+        lambda b, u: (u.at(-1, 0) + u.at(1, 0) + u.at(0, -1) + u.at(0, 1)) * 0.25,
+    )
+    p.store(r, out)
+    return p.finish(boundary=boundary)
+
+
+def _one_device_mesh():
+    import jax
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(jax.devices()[:1]), ("x",))
+
+
+# -------------------------------------------------------------------------
+# Program: metadata + fingerprint stability
+# -------------------------------------------------------------------------
+
+
+def test_program_metadata():
+    prog = _jacobi_prog()
+    assert prog.rank == 2
+    assert prog.field_names == ("u", "out")
+    assert len(prog.output_fields) == 1
+    assert "stencil.apply" in prog.ir_text()
+
+
+def test_fingerprint_stable_across_rebuilds():
+    # structurally identical programs built twice hash identically
+    assert _jacobi_prog().fingerprint == _jacobi_prog().fingerprint
+
+
+def test_fingerprint_changes_on_op_change():
+    base = _jacobi_prog().fingerprint
+    # different constant in the apply body
+    p = ProgramBuilder("jacobi", (16, 16))
+    u = p.input("u")
+    out = p.output("out")
+    t = p.load(u)
+    r = p.apply(
+        [t],
+        lambda b, u: (u.at(-1, 0) + u.at(1, 0) + u.at(0, -1) + u.at(0, 1)) * 0.5,
+    )
+    p.store(r, out)
+    assert p.finish(boundary="periodic").fingerprint != base
+
+
+def test_fingerprint_changes_on_attr_change():
+    # same ops, different boundary attribute → different fingerprint
+    assert (
+        _jacobi_prog(boundary="zero").fingerprint
+        != _jacobi_prog(boundary="periodic").fingerprint
+    )
+    # op-attribute change (store bounds shape via program shape)
+    assert (
+        _jacobi_prog(shape=(16, 32)).fingerprint
+        != _jacobi_prog(shape=(16, 16)).fingerprint
+    )
+
+
+def test_fingerprint_covers_metadata():
+    # same IR, different field names / program name → different identity,
+    # so a cache hit always hands back matching metadata
+    p1 = _jacobi_prog()
+    p2 = Program(_jacobi_prog().func, boundary="periodic",
+                 field_names=("in0", "out0"), name="jacobi")
+    assert p1.fingerprint != p2.fingerprint
+
+
+def test_compile_rejects_program_mutated_after_construction():
+    prog = _jacobi_prog(name="mutation_probe")
+    const = next(
+        op for op in prog.func.walk() if isinstance(op, ir.ConstantOp)
+    )
+    const.attributes["value"] = ir.FloatAttr(0.5)  # rewrite AFTER wrapping
+    with pytest.raises(ValueError, match="mutated"):
+        api.compile(prog, Target())
+
+
+def test_ir_fingerprint_ignores_name_hints():
+    # name hints are debugging sugar, not structure
+    f1 = _jacobi_prog().func
+    f2 = _jacobi_prog().func
+    f2.body.args[0].name_hint = "renamed"
+    assert ir.fingerprint(f1) == ir.fingerprint(f2)
+
+
+# -------------------------------------------------------------------------
+# Target validation: rejected at construction / compile, not inside lowering
+# -------------------------------------------------------------------------
+
+
+def test_target_rejects_unknown_backend():
+    with pytest.raises(TargetError, match="backend"):
+        Target(backend="cuda")
+
+
+def test_target_rejects_decomposed_strategy_without_mesh():
+    with pytest.raises(TargetError, match="no mesh"):
+        Target(strategy=make_strategy_1d(2))
+
+
+def test_target_rejects_mesh_grid_mismatch():
+    mesh = _one_device_mesh()  # axis "x" has size 1
+    with pytest.raises(TargetError, match="mesh size"):
+        Target(mesh=mesh, strategy=make_strategy_1d(2))
+    with pytest.raises(TargetError, match="not in mesh axes"):
+        Target(mesh=mesh, strategy=make_strategy_1d(2, axis="q"))
+
+
+def test_target_rejects_malformed_pipeline_at_construction():
+    from repro.core.passes import PipelineError
+
+    with pytest.raises(PipelineError):
+        Target(pipeline="decompose{grid=2x2")
+
+
+def test_compile_rejects_bad_strategy_rank():
+    # strategy decomposes dim 4 of a rank-2 program
+    prog = _jacobi_prog()
+    bad = Target(strategy=SlicingStrategy((1,), ("x",), (4,)))
+    with pytest.raises(TargetError, match="rank-2"):
+        api.compile(prog, bad)
+
+
+def test_compile_rejects_indivisible_extent():
+    import jax
+    from jax.sharding import Mesh
+
+    prog = _jacobi_prog(shape=(15, 16))
+    # a validation-only mesh (never executed) of logical size 2
+    mesh = Mesh(np.array(jax.devices() * 2), ("x",))
+    target = Target(mesh=mesh, strategy=make_strategy_1d(2))
+    with pytest.raises(TargetError, match="divisible"):
+        api.compile(prog, target)
+
+
+def test_target_auto_single_device():
+    t = Target.auto()
+    # the test process sees one CPU device
+    assert not t.distributed
+    with pytest.raises(TargetError, match="devices"):
+        Target.auto(ranks=64)
+
+
+def test_target_fingerprint_distinguishes_knobs():
+    assert Target().fingerprint == Target().fingerprint
+    assert Target(backend="pallas").fingerprint != Target().fingerprint
+    assert Target(overlap=True).fingerprint != Target().fingerprint
+    assert (
+        Target(pipeline="decompose,swap-elim,lower-comm").fingerprint
+        != Target().fingerprint
+    )
+
+
+# -------------------------------------------------------------------------
+# the process-wide compile cache
+# -------------------------------------------------------------------------
+
+
+def test_compile_cache_hit_returns_same_artifact_and_skips_passes():
+    prog = _jacobi_prog(name="cache_probe")
+    target = Target()
+    first = api.compile(prog, target)
+    assert isinstance(first, CompiledStencil)
+
+    stats0 = api.cache_stats().as_dict()
+    runs0 = PassManager.runs_completed
+    second = api.compile(_jacobi_prog(name="cache_probe"), Target())
+    assert second is first  # same artifact object
+    assert PassManager.runs_completed == runs0  # pass pipeline did not re-run
+    stats1 = api.cache_stats().as_dict()
+    assert stats1["hits"] == stats0["hits"] + 1
+    assert stats1["misses"] == stats0["misses"]
+
+
+def test_compile_cache_misses_on_different_target():
+    prog = _jacobi_prog(name="cache_probe2")
+    a = api.compile(prog, Target())
+    b = api.compile(prog, Target(fuse=False))
+    assert a is not b
+    assert a.pipeline_report.spec != b.pipeline_report.spec
+
+
+def test_top_level_reexport():
+    assert repro.compile is api.compile
+    assert repro.Target is Target
+    assert repro.Program is Program
+
+
+# -------------------------------------------------------------------------
+# donation
+# -------------------------------------------------------------------------
+
+
+def test_buffers_are_donated():
+    """The old StencilComputation computed donate_argnums but never passed
+    them to jax.jit; a donate=True Target must actually donate."""
+    import jax
+    import jax.numpy as jnp
+
+    prog = _jacobi_prog(name="donate_probe")
+    step = api.compile(prog, Target(donate=True))
+    assert step.donate_argnums == (0, 1)  # whole-state handover
+
+    # the input→output aliasing must be visible in the lowering…
+    u = jnp.ones((16, 16), jnp.float32)
+    out = jnp.zeros((16, 16), jnp.float32)
+    txt = jax.jit(step._raw_fn, donate_argnums=step.donate_argnums).lower(
+        u, out
+    ).as_text()
+    assert "tf.aliasing_output" in txt or "jax.buffer_donor" in txt
+
+    # …and actually happen at execution: the donated input buffer is
+    # consumed (its storage rotated into the result)
+    step(u, out)
+    assert u.is_deleted()
+
+
+def test_donation_can_be_disabled():
+    import jax.numpy as jnp
+
+    prog = _jacobi_prog(name="donate_probe2")
+    step = api.compile(prog, Target(donate=False))
+    assert step.donate_argnums == ()
+    out = jnp.zeros((16, 16), jnp.float32)
+    step(jnp.ones((16, 16), jnp.float32), out)
+    assert not out.is_deleted()
+
+
+# -------------------------------------------------------------------------
+# acceptance: three frontends, one Target, one compile — shim equivalent
+# -------------------------------------------------------------------------
+
+
+def test_three_frontends_share_one_target():
+    from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
+    from repro.frontends.psyclone_like import recognize
+
+    shape = (24, 24)
+    target = Target()  # ONE target for all three frontends
+
+    oec = _jacobi_prog(shape=shape, name="j")
+
+    def kern(u, out):
+        out[i, j] = 0.25 * (u[i - 1, j] + u[i + 1, j] + u[i, j - 1] + u[i, j + 1])
+
+    psy = recognize(kern, shape=shape, boundary="periodic")
+
+    g = Grid(shape=shape, extent=shape)  # spacing 1
+    u = TimeFunction(name="u", grid=g, space_order=2)
+    expr = (
+        u.shifted(0, -1) + u.shifted(0, 1) + u.shifted(1, -1) + u.shifted(1, 1)
+    ) * 0.25
+    dev = Operator(Eq(u.forward, expr), boundary="periodic").program
+
+    for prog in (oec, psy, dev):
+        assert isinstance(prog, Program)
+
+    rng = np.random.default_rng(8)
+    u0 = rng.standard_normal(shape).astype(np.float32)
+    r_oec = np.asarray(api.compile(oec, target)(u0, np.zeros_like(u0))[0])
+    r_psy = np.asarray(api.compile(psy, target)(u0, np.zeros_like(u0))[0])
+    r_dev = np.asarray(api.compile(dev, target)(u0, np.zeros_like(u0))[0])
+    np.testing.assert_array_equal(r_oec, r_psy)
+    np.testing.assert_array_equal(r_oec, r_dev)
+
+
+def test_stencil_computation_shim_is_bitwise_equivalent():
+    from repro.core.program import CompileOptions, StencilComputation
+
+    prog = _jacobi_prog(name="shim_probe")
+    rng = np.random.default_rng(9)
+    u0 = rng.standard_normal((16, 16)).astype(np.float32)
+
+    new = api.compile(prog, Target())(u0, np.zeros_like(u0))
+    with pytest.deprecated_call(match="StencilComputation"):
+        comp = StencilComputation(_jacobi_prog(name="shim_probe").func,
+                                  boundary="periodic")
+    old = comp.compile(options=CompileOptions())(u0, np.zeros_like(u0))
+    np.testing.assert_array_equal(np.asarray(new[0]), np.asarray(old[0]))
+    # the shim went through the same cache + pipeline
+    assert comp.last_pipeline == Target().pipeline_spec()
+    assert [n for n, _ in comp.last_timings] == comp.last_pipeline.split(",")
+
+
+# -------------------------------------------------------------------------
+# artifact surface: local_ir / pipeline_report / specs / lower / cost
+# -------------------------------------------------------------------------
+
+
+def test_artifact_inspection_surface():
+    from repro.core.dialects import comm, dmp
+
+    step = api.compile(_jacobi_prog(name="inspect_probe"), Target())
+    # comm-lowered local IR, no dmp.swap survives
+    assert not any(isinstance(op, dmp.SwapOp) for op in step.local_ir.body.ops)
+    assert any(isinstance(op, comm.HaloPadOp) for op in step.local_ir.body.ops)
+    # pipeline report matches the spec stage-by-stage
+    names = [n for n, _ in step.pipeline_report.timings]
+    assert names == step.pipeline_report.spec.split(",")
+    assert "pipeline:" in str(step.pipeline_report)
+    # partition specs: one per field arg (trivial strategy → all None)
+    assert len(step.partition_specs) == 2
+    # AOT lower + roofline cost
+    cost = step.cost()
+    assert cost.flops > 0
+    assert cost.dominant in ("compute", "memory", "collective")
+    assert cost.t_serial >= cost.t_overlapped
+
+
+def test_time_loop_on_artifact():
+    step = api.compile(_jacobi_prog(name="loop_probe"), Target())
+    rng = np.random.default_rng(10)
+    u0 = rng.standard_normal((16, 16)).astype(np.float32)
+    # 2 steps via time_loop == 2 manual calls
+    (via_loop,) = step.time_loop([u0], 2)
+    once = step(u0, np.zeros_like(u0))[0]
+    twice = step(np.asarray(once), np.zeros_like(u0))[0]
+    np.testing.assert_allclose(
+        np.asarray(via_loop), np.asarray(twice), rtol=1e-6
+    )
+
+
+def test_lower_ir_cache_for_generated_exchanges():
+    """dist/context_parallel's entry point: same exchange shape → cached
+    (lru memo on top, fingerprint-keyed api cache underneath)."""
+    from repro.dist.context_parallel import SeqHaloSpec, _comm_func
+
+    spec = SeqHaloSpec(axis="x", n_shards=4, halo_lo=3)
+    f1 = _comm_func((2, 8, 4), spec)
+    # the thin lru memo short-circuits repeat calls entirely
+    assert _comm_func((2, 8, 4), spec) is f1
+    # the process-wide api cache underneath hits when the memo is bypassed
+    # (fresh IR build, same fingerprint)
+    stats0 = api.cache_stats().as_dict()
+    f2 = _comm_func.__wrapped__((2, 8, 4), spec)
+    assert f2 is f1
+    assert api.cache_stats().hits == stats0["hits"] + 1

@@ -27,7 +27,7 @@ SCENARIOS = [
     "overlap-box-seq",
     "overlap-diagonal",
     "overlap-pallas",
-    "comm_dialect",
+    "pipeline-spec",
     "pallas",
     "wide-halo",
     "time-loop",

@@ -7,7 +7,7 @@ all three DSLs produces identical results through the shared pipeline.
 import numpy as np
 import pytest
 
-from repro.core.program import CompileOptions, StencilComputation, time_loop
+from repro.api import compile as api_compile, time_loop
 from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
 from repro.frontends.oec_like import ProgramBuilder
 from repro.frontends.psyclone_like import RecognitionError, recognize
@@ -132,10 +132,10 @@ def test_psyclone_recognizes_jacobi():
     def kern(u, out):
         out[i, j] = 0.25 * (u[i - 1, j] + u[i + 1, j] + u[i, j - 1] + u[i, j + 1])
 
-    comp = recognize(kern, shape=(20, 20), boundary="periodic")
+    prog = recognize(kern, shape=(20, 20), boundary="periodic")
     rng = np.random.default_rng(4)
     u0 = rng.standard_normal((20, 20)).astype(np.float32)
-    (got,) = comp.compile()(u0, np.zeros_like(u0))
+    (got,) = api_compile(prog)(u0, np.zeros_like(u0))
     np.testing.assert_allclose(np.asarray(got), np_jacobi(u0, "periodic"), rtol=1e-5)
 
 
@@ -145,12 +145,12 @@ def test_psyclone_multi_statement_dependency():
         flux[i, j] = 0.5 * (u[i + 1, j] - u[i - 1, j])
         out[i, j] = u[i, j] - 0.1 * (flux[i + 1, j] - flux[i, j])
 
-    comp = recognize(kern, shape=(16, 16), boundary="periodic")
+    prog = recognize(kern, shape=(16, 16), boundary="periodic")
     rng = np.random.default_rng(5)
     u0 = rng.standard_normal((16, 16)).astype(np.float32)
     flux0 = np.zeros_like(u0)
     out0 = np.zeros_like(u0)
-    results = comp.compile()(u0, flux0, out0)
+    results = api_compile(prog)(u0, flux0, out0)
     got_flux, got_out = [np.asarray(r) for r in results]
 
     want_flux = 0.5 * (np.roll(u0, -1, 0) - np.roll(u0, 1, 0))
@@ -171,9 +171,9 @@ def test_psyclone_3d_kernel():
     def kern(u, out):
         out[i, j, k] = (u[i, j, k - 1] + u[i, j, k + 1]) * 0.5
 
-    comp = recognize(kern, shape=(8, 8, 8), boundary="periodic")
+    prog = recognize(kern, shape=(8, 8, 8), boundary="periodic")
     u0 = np.random.default_rng(6).standard_normal((8, 8, 8)).astype(np.float32)
-    (got,) = comp.compile()(u0, np.zeros_like(u0))
+    (got,) = api_compile(prog)(u0, np.zeros_like(u0))
     got = np.asarray(got)
     want = 0.5 * (np.roll(u0, 1, 2) + np.roll(u0, -1, 2))
     np.testing.assert_allclose(got, want, rtol=1e-5)
@@ -194,10 +194,10 @@ def test_oec_builder_jacobi():
         lambda b, u: (u.at(-1, 0) + u.at(1, 0) + u.at(0, -1) + u.at(0, 1)) * 0.25,
     )
     p.store(r, out)
-    comp = p.finish(boundary="zero")
+    prog = p.finish(boundary="zero")
     rng = np.random.default_rng(7)
     u0 = rng.standard_normal((20, 20)).astype(np.float32)
-    (got,) = comp.compile()(u0, np.zeros_like(u0))
+    (got,) = api_compile(prog)(u0, np.zeros_like(u0))
     np.testing.assert_allclose(np.asarray(got), np_jacobi(u0, "zero"), rtol=1e-5)
 
 
@@ -221,14 +221,14 @@ def test_three_frontends_agree():
         lambda b, u: (u.at(-1, 0) + u.at(1, 0) + u.at(0, -1) + u.at(0, 1)) * 0.25,
     )
     p.store(r, of)
-    r_oec = np.asarray(p.finish(boundary="periodic").compile()(u0, np.zeros_like(u0))[0])
+    r_oec = np.asarray(api_compile(p.finish(boundary="periodic"))(u0, np.zeros_like(u0))[0])
 
     # 2. PSyclone-like
     def kern(u, out):
         out[i, j] = 0.25 * (u[i - 1, j] + u[i + 1, j] + u[i, j - 1] + u[i, j + 1])
 
     r_psy = np.asarray(
-        recognize(kern, shape=shape, boundary="periodic").compile()(
+        api_compile(recognize(kern, shape=shape, boundary="periodic"))(
             u0, np.zeros_like(u0)
         )[0]
     )

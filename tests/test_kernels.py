@@ -155,7 +155,7 @@ def test_choose_tile_respects_budget_and_divisibility():
 
 def test_kernel_backend_equals_jnp_backend_end_to_end():
     """Same stencil program through lowering w/ jnp vs pallas backends."""
-    from repro.core.program import CompileOptions
+    from repro.api import Target, compile as api_compile
     from repro.frontends.oec_like import ProgramBuilder
 
     def build():
@@ -173,8 +173,8 @@ def test_kernel_backend_equals_jnp_backend_end_to_end():
 
     u0 = _rand((32, 32), seed=13)
     out0 = np.zeros_like(u0)
-    r_jnp = build().compile(options=CompileOptions(backend="jnp"))(u0, out0)
-    r_pal = build().compile(options=CompileOptions(backend="pallas"))(u0, out0)
+    r_jnp = api_compile(build(), Target(backend="jnp"))(u0, out0)
+    r_pal = api_compile(build(), Target(backend="pallas"))(u0, out0)
     np.testing.assert_allclose(
         np.asarray(r_jnp[0]), np.asarray(r_pal[0]), rtol=1e-5, atol=1e-6
     )

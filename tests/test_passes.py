@@ -280,8 +280,18 @@ def test_cse_dedupes_accesses():
 # -------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("opt", ["overlap", "diagonal", "comm_dialect"])
-def test_beyond_paper_rewrites_preserve_semantics(opt):
+# "pipeline" replaces the removed comm_dialect flag: the canonical spec
+# written out explicitly must match the flag-denoted default pipeline.
+@pytest.mark.parametrize(
+    "kw",
+    [
+        {"overlap": True},
+        {"diagonal": True},
+        {"pipeline": "fuse,cse,dce,decompose,swap-elim,lower-comm"},
+    ],
+    ids=["overlap", "diagonal", "pipeline"],
+)
+def test_beyond_paper_rewrites_preserve_semantics(kw):
     from repro.core.program import CompileOptions
 
     rng = np.random.default_rng(7)
@@ -292,6 +302,6 @@ def test_beyond_paper_rewrites_preserve_semantics(opt):
         options=CompileOptions()
     )(u0, out0)
     opt_result = StencilComputation(_jacobi_prog((16, 16)), boundary="periodic").compile(
-        options=CompileOptions(**{opt: True})
+        options=CompileOptions(**kw)
     )(u0, out0)
     np.testing.assert_allclose(np.asarray(base), np.asarray(opt_result), rtol=1e-6)

@@ -139,12 +139,12 @@ def test_interpreter_rejects_dmp_swap():
         interp(np.zeros((16, 16), np.float32), np.zeros((16, 16), np.float32))
 
 
-def test_comm_dialect_option_is_noop():
+def test_comm_dialect_option_is_deprecated_noop():
     comp = StencilComputation(_jacobi_prog(), boundary="periodic")
     a = comp.prepare_local(make_strategy_2d((2, 2)), CompileOptions())
-    b = comp.prepare_local(
-        make_strategy_2d((2, 2)), CompileOptions(comm_dialect=True)
-    )
+    with pytest.deprecated_call(match="comm_dialect"):
+        opts = CompileOptions(comm_dialect=True)
+    b = comp.prepare_local(make_strategy_2d((2, 2)), opts)
     assert [op.name for op in a.body.ops] == [op.name for op in b.body.ops]
 
 
