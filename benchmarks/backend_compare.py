@@ -25,11 +25,15 @@ def _hlo_op_count(fn, *args) -> int:
     )
 
 
-def run(fast: bool = False, overlap: str = "off") -> dict:
+def run(fast: bool = False, overlap: str = "off",
+        exchange_every: int = 1) -> dict:
     """``overlap="on"`` adds a variant compiled through the IR-level
     ``split_overlapped_applies`` path (interior/frame split + combine),
     so the rewrite's overhead/win is measurable against ``jnp_opt`` on
-    the same hardware."""
+    the same hardware.  ``exchange_every=k`` adds a temporally-tiled
+    variant (one exchange epoch, k steps per call): its output after one
+    epoch must equal k sequential ``jnp_opt`` steps, and its throughput
+    is reported *per step* so the redundant-compute overhead is visible."""
     shape = (256, 256) if fast else (1024, 1024)
     g = Grid(shape=shape, extent=(1.0, 1.0))
     u = TimeFunction(name="u", grid=g, space_order=8)
@@ -58,6 +62,30 @@ def run(fast: bool = False, overlap: str = "off") -> dict:
         record[name] = {"sec": sec, "gpts": gpts(shape, sec)}
         rows.append((name, f"{gpts(shape, sec):.3f}", "allclose ✓"))
 
+    if exchange_every > 1:
+        k = exchange_every
+        op = Operator(Eq(u.dt, 0.5 * u.laplace), dt=1e-7, boundary="zero")
+        base_step = op.compile_step(target=variants["jnp_opt"])
+        epoch_step = op.compile_step(
+            target=Target(backend="jnp", fuse=True, cse=True,
+                          exchange_every=k)
+        )
+        want = u0
+        for _ in range(k):
+            want = base_step(want)[0]
+        got = epoch_step(u0)[0]  # one epoch == k steps
+        # so8 under jit: XLA may FMA-contract the fused epoch differently
+        # than k separate step programs (~1 ulp, DESIGN.md §2) — compare
+        # at ulp tolerance like the distribution tests
+        np.testing.assert_allclose(
+            np.asarray(want), np.asarray(got), rtol=1e-6, atol=1e-6
+        )
+        sec = time_step(lambda a: epoch_step(a), (u0,), iters=3, warmup=1) / k
+        name = f"jnp_opt_ee{k}"
+        record[name] = {"sec": sec, "gpts": gpts(shape, sec)}
+        rows.append((name, f"{gpts(shape, sec):.3f}",
+                     f"allclose == {k}× jnp_opt"))
+
     print(table("backend comparison (so8 heat, one IR → N backends)", rows,
                 ["backend", "GPts/s", "vs jnp_raw"]))
     save_record("backend_compare", record)
@@ -70,5 +98,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--overlap", choices=["on", "off"], default="off")
+    ap.add_argument("--exchange-every", type=int, default=1,
+                    help="epoch depth k: adds a one-exchange-per-k-steps "
+                         "variant (bitwise-checked against k jnp_opt steps)")
     a = ap.parse_args()
-    run(fast=a.fast, overlap=a.overlap)
+    run(fast=a.fast, overlap=a.overlap, exchange_every=a.exchange_every)

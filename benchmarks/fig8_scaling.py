@@ -29,6 +29,7 @@ from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
+LINK_LATENCY = 2e-6  # per-message launch latency (matches launch/roofline)
 
 GLOBAL = (512, 512, 512)
 RANK_GRIDS = {
@@ -69,7 +70,46 @@ def _stencil_stats(kind: str, so: int, grid_shape: tuple) -> dict:
     }
 
 
-def run(fast: bool = False, overlap: str = "both") -> dict:
+def _tiling_sweep(record: dict, ranks: list, exchange_every: tuple) -> list:
+    """Temporal-tiling model rows: per-step time at epoch depth k =
+    redundant-compute-scaled work + amortized per-epoch message latency +
+    (depth-k) halo bytes once per k steps ≈ per-step bytes.
+
+    Heat only: the wave kernel is time_order=2 (two input buffers, one
+    output) — its state does not rotate closed within one epoch, so
+    ``Target(exchange_every=k)`` rejects it (``TargetError``) and a
+    modeled number would describe an uncompilable configuration."""
+    rows = []
+    for kind in ("heat",):
+        for R in ranks:
+            st = record[f"{kind}_r{R}"]
+            local = tuple(G // r for G, r in zip(GLOBAL, RANK_GRIDS[R]))
+            w = 2  # so4 taps reach ±2
+            t_comp = st["t_comp"]
+            t_bytes = st["halo_bytes"] / LINK_BW
+            n_msgs = 2 * len(local)  # one send/recv pair per face
+            row = [kind, R]
+            for k in exchange_every:
+                if any(k * w > n for n in local):
+                    row.append("-")  # deep halo outgrows the shard
+                    continue
+                vols = [
+                    float(np.prod([n + 2 * j * w for n in local]))
+                    for j in range(k)
+                ]
+                rcf = sum(vols) / (k * float(np.prod(local)))
+                t_step = (
+                    t_comp * rcf + t_bytes + n_msgs * LINK_LATENCY / k
+                )
+                gp = st["local_points"] * R / t_step / 1e9
+                record[f"{kind}_r{R}"][f"gpts_ee{k}"] = gp
+                row.append(f"{gp:.0f}")
+            rows.append(tuple(row))
+    return rows
+
+
+def run(fast: bool = False, overlap: str = "both",
+        exchange_every: tuple = (1,)) -> dict:
     """``overlap`` selects the latency-hiding regime to report: "off" is
     the paper's blocking exchange (t_comp + t_comm), "on" is the
     split-overlapped pipeline (max(t_comp, t_comm) — the IR-level
@@ -114,6 +154,14 @@ def run(fast: bool = False, overlap: str = "both") -> dict:
         f"overlap={overlap})",
         rows, headers,
     ))
+    if tuple(exchange_every) != (1,):
+        tile_rows = _tiling_sweep(record, ranks, tuple(exchange_every))
+        print(table(
+            "fig8: temporal-tiling sweep (GPts/s per exchange_every, "
+            "latency amortized 1/k vs redundant boundary compute)",
+            tile_rows,
+            ["kernel", "ranks"] + [f"k={k}" for k in exchange_every],
+        ))
     # structural assertion recorded for EXPERIMENTS.md: halo bytes per
     # rank shrink as ranks grow (surface/volume)
     hb = [record[f"heat_r{R}"]["halo_bytes"] for R in ranks]
@@ -128,5 +176,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--overlap", choices=["on", "off", "both"], default="both")
+    ap.add_argument("--exchange-every", default="1",
+                    help="comma list of epoch depths to sweep, e.g. 1,2,4,8")
     a = ap.parse_args()
-    run(fast=a.fast, overlap=a.overlap)
+    run(fast=a.fast, overlap=a.overlap,
+        exchange_every=tuple(int(k) for k in a.exchange_every.split(",")))

@@ -158,6 +158,12 @@ class Target:
     cse: bool = True
     overlap: bool = False
     diagonal: bool = False
+    # Deep-halo temporal tiling (temporal-tile pass): exchange a depth-k
+    # halo once, then run k stencil steps with redundant boundary compute
+    # before the next exchange.  One call of the compiled artifact is one
+    # *epoch* of k time steps; ``time_loop`` keeps counting single steps
+    # and iterates in epochs.  1 = one exchange per step (the baseline).
+    exchange_every: int = 1
     pallas_interpret: bool = True  # CPU container: interpret kernels
     pallas_tile: Optional[tuple] = None
     # Donate every field buffer to jit (classic double-buffer rotation:
@@ -173,10 +179,34 @@ class Target:
             )
         if self.pallas_tile is not None:
             object.__setattr__(self, "pallas_tile", tuple(self.pallas_tile))
+        if int(self.exchange_every) != self.exchange_every or self.exchange_every < 1:
+            raise TargetError(
+                f"exchange_every must be a positive integer (1 = exchange "
+                f"every step), got {self.exchange_every!r}"
+            )
+        object.__setattr__(self, "exchange_every", int(self.exchange_every))
         if self.pipeline is not None:
             from repro.core.passes import parse_pipeline
 
-            parse_pipeline(self.pipeline)  # raises PipelineError if malformed
+            stages = parse_pipeline(self.pipeline)  # raises if malformed
+            # an explicit pipeline must agree with exchange_every: the
+            # time_loop epoch arithmetic is driven by the Target knob
+            k_spec = 1
+            for name, opts in stages:
+                if name == "temporal-tile":
+                    try:
+                        k_spec = int(opts.get("k", self.exchange_every))
+                    except ValueError:
+                        raise TargetError(
+                            f"pipeline stage temporal-tile: k must be an "
+                            f"integer, got {opts.get('k')!r}"
+                        )
+            if k_spec != self.exchange_every:
+                raise TargetError(
+                    f"pipeline stage temporal-tile{{k={k_spec}}} disagrees "
+                    f"with Target(exchange_every={self.exchange_every}); "
+                    "set both to the same epoch depth"
+                )
         s = self.strategy
         if s is not None:
             decomposed = [
@@ -225,7 +255,7 @@ class Target:
     def pipeline_spec(self) -> str:
         """The pass-pipeline spec this target denotes (explicit ``pipeline``
         or the canonical flag expansion, fig. 4): [fuse,cse] → decompose →
-        swap-elim → [diagonal] → [overlap] → lower-comm."""
+        swap-elim → [temporal-tile] → [diagonal] → [overlap] → lower-comm."""
         if self.pipeline is not None:
             return self.pipeline
         stages: list[str] = []
@@ -234,6 +264,8 @@ class Target:
         if self.cse:
             stages += ["cse", "dce"]
         stages += ["decompose", "swap-elim"]
+        if self.exchange_every > 1:
+            stages.append(f"temporal-tile{{k={self.exchange_every}}}")
         if self.diagonal:
             stages.append("diagonal")
         if self.overlap:
@@ -267,6 +299,10 @@ class Target:
                 f"strategy={strat_desc}",
                 f"backend={self.backend}",
                 f"pipeline={self.pipeline_spec()}",
+                # explicit even though the default spec carries it: an
+                # explicit ``pipeline`` must still produce distinct cached
+                # artifacts per epoch depth (time_loop arithmetic differs)
+                f"exchange_every={self.exchange_every}",
                 f"pallas_interpret={self.pallas_interpret}",
                 f"pallas_tile={self.pallas_tile}",
                 f"donate={self.donate}",
@@ -333,7 +369,8 @@ class CompiledStencil:
     def step(self, dtype=None) -> Callable:
         """A step over the *input* fields only: output buffers (fully
         overwritten every call) are allocated internally — the shape
-        ``time_loop`` rotation wants."""
+        ``time_loop`` rotation wants.  With ``Target(exchange_every=k)``
+        one call advances a whole k-step epoch."""
         outs = set(self._out_indices)
 
         def fn(*inputs):
@@ -350,9 +387,23 @@ class CompiledStencil:
         return fn
 
     def time_loop(self, state: Sequence[Any], n_steps: int, unroll: int = 1):
-        """Iterate the step ``n_steps`` times with time-buffer rotation
-        (``state`` ordered oldest→newest) under one ``lax.fori_loop``."""
-        return time_loop(self.step(), tuple(state), n_steps, unroll=unroll)
+        """Iterate ``n_steps`` *time steps* with time-buffer rotation
+        (``state`` ordered oldest→newest) under one ``lax.fori_loop``.
+
+        ``n_steps`` always counts single time steps regardless of the
+        target's ``exchange_every``: a depth-k artifact advances k steps
+        per call, so the loop runs ``n_steps // k`` epochs (``n_steps``
+        must divide evenly — a partial epoch has no compiled form)."""
+        k = self.target.exchange_every
+        if k > 1 and n_steps % k != 0:
+            raise ValueError(
+                f"time_loop(n_steps={n_steps}) with "
+                f"Target(exchange_every={k}): n_steps must be a multiple of "
+                f"the epoch depth (each call advances {k} steps)"
+            )
+        return time_loop(
+            self.step(), tuple(state), n_steps // k, unroll=unroll
+        )
 
     # -- inspection ------------------------------------------------------
     def lower(self, dtype=jnp.float32):
@@ -373,17 +424,44 @@ class CompiledStencil:
     def cost(self, dtype=jnp.float32):
         """Roofline terms of the compiled executable (launch/roofline):
         per-device FLOPs / HBM bytes / collective bytes → seconds per
-        term, dominant bottleneck, overlapped/serial step time."""
+        term, dominant bottleneck, overlapped/serial step time — plus the
+        temporal-tiling tradeoff terms (message count per epoch, per-step
+        halo widths, shard extents) so ``.cost().recommend_exchange_every()``
+        can pick the epoch depth that balances amortized exchange latency
+        against redundant boundary compute."""
+        from repro.core.dialects import comm
         from repro.launch.roofline import RooflineTerms, collective_bytes_from_hlo
 
         compiled = self.lower(dtype).compile()
         cost = compiled.cost_analysis()
         if isinstance(cost, (list, tuple)):  # older jax: one dict per program
             cost = cost[0] if cost else {}
+        from repro.core.passes.temporal import TemporalTilingError, epoch_halo
+
+        step_halo: tuple = ()
+        try:
+            lo1, hi1 = epoch_halo(self.program.func, 1)
+            step_halo = tuple(max(l, h) for l, h in zip(lo1, hi1))
+        except TemporalTilingError:
+            pass  # non-epochable program shapes carry no tiling terms
+        local_shape: tuple = ()
+        if self.program.field_args:
+            local_shape = self.strategy.local_bounds(
+                self.program.field_args[0].type.bounds
+            ).shape
+        messages = sum(
+            1
+            for op in self.local_ir.body.ops
+            if isinstance(op, comm.ExchangeStartOp)
+        )
         return RooflineTerms(
             flops=cost.get("flops") or 0.0,
             bytes_accessed=cost.get("bytes accessed") or 0.0,
             collectives=collective_bytes_from_hlo(compiled.as_text()),
+            exchange_every=self.target.exchange_every,
+            messages_per_epoch=messages,
+            step_halo=step_halo,
+            local_shape=local_shape,
         )
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -478,22 +556,65 @@ def compile(program: Program, target: Optional[Target] = None) -> CompiledStenci
 
 def _validate_for_program(program: Program, target: Target) -> None:
     s = target.strategy
-    if s is None:
+    if s is not None:
+        for g, d in zip(s.grid_shape, s.dims):
+            if d >= program.rank:
+                raise TargetError(
+                    f"strategy decomposes dim {d} of a rank-{program.rank} "
+                    f"program {program.name!r}"
+                )
+            if g > 1:
+                for f in program.field_args:
+                    extent = f.type.bounds.shape[d]
+                    if extent % g != 0:
+                        raise TargetError(
+                            f"dim {d} extent {extent} of {program.name!r} not "
+                            f"divisible by grid size {g}"
+                        )
+    if target.exchange_every > 1:
+        _validate_exchange_every(program, target)
+
+
+def _validate_exchange_every(program: Program, target: Target) -> None:
+    """A depth-k epoch exchanges a k-times-accumulated halo in one shot;
+    the send slab must come out of the neighbour's core, so the deep width
+    cannot exceed the local shard extent on any axis."""
+    from repro.core.passes.temporal import TemporalTilingError, epoch_halo
+
+    k = target.exchange_every
+    try:
+        lo1, hi1 = epoch_halo(program.func, 1)
+        lok, hik = epoch_halo(program.func, k)
+    except TemporalTilingError as e:
+        raise TargetError(
+            f"Target(exchange_every={k}) cannot epoch program "
+            f"{program.name!r}: {e}"
+        )
+    s = target.strategy
+    grid_of_dim = {}
+    if s is not None:
+        for g, ax, d in zip(s.grid_shape, s.axis_names, s.dims):
+            grid_of_dim[d] = (g, ax)
+    if not program.field_args:
         return
-    for g, d in zip(s.grid_shape, s.dims):
-        if d >= program.rank:
-            raise TargetError(
-                f"strategy decomposes dim {d} of a rank-{program.rank} "
-                f"program {program.name!r}"
+    shape = program.field_args[0].type.bounds.shape
+    for d in range(program.rank):
+        g, ax = grid_of_dim.get(d, (1, None))
+        local_n = shape[d] // g
+        deep = max(lok[d], hik[d])
+        step = max(lo1[d], hi1[d])
+        if deep > local_n:
+            where = (
+                f"mesh axis {ax!r}" if ax is not None else "undecomposed"
             )
-        if g > 1:
-            for f in program.field_args:
-                extent = f.type.bounds.shape[d]
-                if extent % g != 0:
-                    raise TargetError(
-                        f"dim {d} extent {extent} of {program.name!r} not "
-                        f"divisible by grid size {g}"
-                    )
+            max_k = local_n // step if step else k
+            raise TargetError(
+                f"Target(exchange_every={k}) on {program.name!r}: deep halo "
+                f"{deep} (inferred per-step depth {step}, accumulated over "
+                f"{k} steps) along dim {d} ({where}) exceeds the local shard "
+                f"extent {local_n}; use exchange_every <= {max_k} or "
+                f"decompose dim {d} over fewer ranks"
+            )
 
 
 def partition_specs(program: Program, strategy: SlicingStrategy) -> list:
@@ -512,7 +633,11 @@ def partition_specs(program: Program, strategy: SlicingStrategy) -> list:
 def _build(program: Program, target: Target) -> CompiledStencil:
     strategy = target.strategy or trivial_strategy(program.rank)
     spec = target.pipeline_spec()
-    ctx = PipelineContext(strategy=strategy, boundary=program.boundary)
+    ctx = PipelineContext(
+        strategy=strategy,
+        boundary=program.boundary,
+        exchange_every=target.exchange_every,
+    )
     pm = PassManager(build_pipeline(spec, ctx))
     local = pm.run(_clone_func(program.func))
     report = PipelineReport(spec=spec, timings=tuple(pm.timings))

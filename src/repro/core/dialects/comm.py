@@ -213,6 +213,55 @@ class WaitOp(Operation):
                 )
 
 
+class BoundaryMaskOp(Operation):
+    """``%out = comm.boundary_mask %t {core, grid}`` — re-apply a *zero*
+    (dirichlet) boundary condition to redundantly-computed points.
+
+    Emitted by the temporal-tiling pass: an epoch's intermediate applies
+    compute into the halo frame, and points that lie outside the
+    *physical* (global) domain must read as the boundary value for the
+    next step, exactly as a fresh ``comm.halo_pad`` would have provided.
+    The op is rank-position-aware but communication-free: a point at
+    local logical coordinate ``p`` along dim ``d`` sits at global
+    coordinate ``axis_index * n + (p - core.lb)`` and is zeroed when that
+    falls outside ``[0, grid_extent * n)``.  Points inside the physical
+    domain pass through untouched (bitwise)."""
+
+    name = "comm.boundary_mask"
+
+    def __init__(
+        self,
+        temp: SSAValue,
+        core: Bounds,
+        grid,  # dmp.GridAttr
+    ) -> None:
+        assert isinstance(temp.type, TempType)
+        super().__init__(
+            operands=[temp],
+            result_types=[temp.type],
+            attributes={"core": core, "grid": grid},
+        )
+
+    @property
+    def temp(self) -> SSAValue:
+        return self.operands[0]
+
+    @property
+    def core(self) -> Bounds:
+        return self.attributes["core"]  # type: ignore[return-value]
+
+    @property
+    def grid(self):
+        return self.attributes["grid"]
+
+    def verify_(self) -> None:
+        if self.core.rank != self.temp.type.bounds.rank:
+            raise VerificationError(
+                f"comm.boundary_mask core rank {self.core.rank} != temp "
+                f"rank {self.temp.type.bounds.rank}"
+            )
+
+
 class AllReduceOp(Operation):
     """``%r = comm.allreduce %v {axes, op}`` — MPI_Allreduce analogue
     (lowers to jax.lax.psum/pmax over named mesh axes)."""

@@ -239,6 +239,8 @@ class StencilInterpreter:
             env[op.results[0]] = self._exec_comm_start(op, env[op.temp])
         elif isinstance(op, comm.WaitOp):
             self._exec_comm_wait(op, env)
+        elif isinstance(op, comm.BoundaryMaskOp):
+            env[op.results[0]] = self._exec_boundary_mask(op, env[op.temp])
         elif isinstance(op, comm.AllReduceOp):
             v = env[op.operands[0]]
             red = {"sum": lax.psum, "max": lax.pmax, "min": lax.pmin}[op.op]
@@ -264,11 +266,13 @@ class StencilInterpreter:
             from repro.kernels.stencil_apply import run_apply_pallas
 
             tile = self.pallas_tile
-            # a split interior may not fit the user tile — auto-tile it;
-            # unsplit applies keep run_apply_pallas's loud divisibility
-            # assert so a misconfigured pallas_tile stays diagnosable
+            # a split interior (or an epoch-tiled apply, whose grown frame
+            # changes the shape per step) may not fit the user tile —
+            # auto-tile it; unsplit applies keep run_apply_pallas's loud
+            # divisibility assert so a misconfigured pallas_tile stays
+            # diagnosable
             if (
-                part is not None
+                (part is not None or "epoch_step" in op.attributes)
                 and tile is not None
                 and any(s % t != 0 for s, t in zip(rb.shape, tile))
             ):
@@ -309,6 +313,32 @@ class StencilInterpreter:
             return lax.ppermute(patch, axis_arg, pairs)
         # local emulation: every grid axis has size 1
         return patch if periodic else jnp.zeros_like(patch)
+
+    def _exec_boundary_mask(self, op: comm.BoundaryMaskOp, x):
+        """Zero every point outside the physical (global) domain — the
+        temporal-tiling analogue of the zero-BC halo_pad, applied to
+        redundantly-computed epoch intermediates.  Rank-position-aware
+        (lax.axis_index) but communication-free."""
+        vb: stencil.Bounds = op.temp.type.bounds
+        core: stencil.Bounds = op.core
+        grid: dmp.GridAttr = op.grid
+        for d in range(vb.rank):
+            if core.lb[d] <= vb.lb[d] and vb.ub[d] <= core.ub[d]:
+                continue  # no points outside this shard's core along d
+            gax = grid.axis_of_dim(d)
+            n = core.ub[d] - core.lb[d]
+            grid_extent = grid.shape[gax] if gax is not None else 1
+            if self.distributed and gax is not None and grid_extent > 1:
+                coord = lax.axis_index(grid.axis_names[gax])
+            else:
+                coord = 0
+            pos = lax.broadcasted_iota(jnp.int32, x.shape, d) + jnp.int32(
+                vb.lb[d] - core.lb[d]
+            )
+            glob = coord * n + pos
+            keep = (glob >= 0) & (glob < grid_extent * n)
+            x = jnp.where(keep, x, jnp.zeros_like(x))
+        return x
 
     def _exec_comm_wait(self, op: comm.WaitOp, env) -> None:
         x = env[op.temp]

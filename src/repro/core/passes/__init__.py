@@ -16,8 +16,10 @@ Grammar (mlir-opt's textual pipeline, single-level):
 
 ``decompose`` accepts ``grid=4x2`` (rank-grid shape, optionally suffixed
 with axis names: ``grid=2x2xy``), ``dims=0x1`` and ``boundary=zero|
-periodic``; omitted options fall back to the ``PipelineContext`` the
-driver supplies.  Dump the IR after every stage with
+periodic``; ``temporal-tile`` accepts ``k=4`` (epoch depth — exchange a
+depth-k halo once, step k times); omitted options fall back to the
+``PipelineContext`` the driver supplies.  Dump the IR after every stage
+with
 
     python -m repro.core.passes "<spec>" [--program jacobi|box|chain]
 """
@@ -82,6 +84,11 @@ from repro.core.passes.overlap import (  # noqa: E402,F401
 )
 from repro.core.passes.diagonal import use_diagonal_exchanges  # noqa: E402,F401
 from repro.core.passes.lower_comm import lower_dmp_to_comm  # noqa: E402,F401
+from repro.core.passes.temporal import (  # noqa: E402,F401
+    TemporalTilingError,
+    epoch_halo,
+    temporal_tile,
+)
 
 
 # --------------------------------------------------------------------------
@@ -92,10 +99,13 @@ from repro.core.passes.lower_comm import lower_dmp_to_comm  # noqa: E402,F401
 @dataclasses.dataclass
 class PipelineContext:
     """Driver-supplied defaults for passes whose options are objects the
-    textual spec cannot carry (the decomposition strategy, boundary)."""
+    textual spec cannot carry (the decomposition strategy, boundary), plus
+    the epoch depth ``temporal-tile`` falls back to when the spec omits
+    ``k=`` (``repro.api.compile`` passes ``Target.exchange_every``)."""
 
     strategy: Optional[SlicingStrategy] = None
     boundary: str = "zero"
+    exchange_every: int = 1
 
 
 class PipelineError(ValueError):
@@ -228,6 +238,19 @@ def _make_fuse(opts: dict, ctx: PipelineContext) -> Callable:
     return _named("fuse", lambda f: fuse_applies(f, **kw))
 
 
+def _make_temporal(opts: dict, ctx: PipelineContext) -> Callable:
+    _check_opts("temporal-tile", opts, ("k",))
+    try:
+        k = int(opts["k"]) if "k" in opts else int(ctx.exchange_every)
+    except ValueError:
+        raise PipelineError(
+            f"temporal-tile: k must be an integer, got {opts.get('k')!r}"
+        )
+    if k < 1:
+        raise PipelineError(f"temporal-tile: k must be >= 1, got {k}")
+    return _named("temporal-tile", lambda f: temporal_tile(f, k))
+
+
 def _make_simple(name: str, fn: Callable) -> Callable:
     """Factory for option-less stages; rejects any option (mlir-opt does)."""
 
@@ -245,6 +268,8 @@ PASS_REGISTRY: dict[str, Callable] = {
     "dce": _make_simple("dce", dce),
     "decompose": _make_decompose,
     "swap-elim": _make_simple("swap-elim", eliminate_redundant_swaps),
+    # deep-halo temporal tiling: one exchange epoch, k steps (k=1: identity)
+    "temporal-tile": _make_temporal,
     "shrink-swaps": _make_simple("shrink-swaps", shrink_swaps_to_consumers),
     "diagonal": _make_simple("diagonal", use_diagonal_exchanges),
     # "overlap" is tag + split: after it, tagged swaps are already comm ops

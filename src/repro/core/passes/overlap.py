@@ -58,10 +58,34 @@ def overlap_enabled(swap: dmp.SwapOp) -> bool:
 # --------------------------------------------------------------------------
 
 
+def _bounds_or_none(lb: tuple, ub: tuple):
+    """Bounds(lb, ub), or None when empty in any dim (Bounds itself
+    asserts non-degeneracy)."""
+    if any(u - l <= 0 for l, u in zip(lb, ub)):
+        return None
+    return stencil.Bounds(tuple(lb), tuple(ub))
+
+
+def _intersect(a: stencil.Bounds, b: stencil.Bounds):
+    """Intersection of two bounds, or None when empty in any dim."""
+    return _bounds_or_none(
+        tuple(max(x, y) for x, y in zip(a.lb, b.lb)),
+        tuple(min(x, y) for x, y in zip(a.ub, b.ub)),
+    )
+
+
 def _split_plan(swap: dmp.SwapOp):
-    """The (consumer apply, interior bounds, frame widths) this swap's
-    split would use, or None when ineligible (shared result, non-apply
-    consumer, or empty interior)."""
+    """The (consumer apply, interior bounds) this swap's split would use,
+    or None when ineligible (shared result, non-apply consumer, or empty
+    interior).
+
+    The interior is the part of the consumer's domain whose reads stay
+    inside the swap's *pre-exchange core* — the exchange only writes
+    outside it — intersected with the result bounds.  For the standard
+    pipeline the two coincide (result bounds == core); a deep-halo
+    temporally-tiled apply computes *beyond* the core, so shrinking only
+    the result bounds would race the interior against the in-flight
+    exchange."""
     consumers = {u.operation for u in swap.results[0].uses}
     if len(consumers) != 1:
         return None
@@ -70,13 +94,15 @@ def _split_plan(swap: dmp.SwapOp):
         return None
     lo_w, hi_w = _apply_halo_widths(apply)
     rb = apply.result_bounds
-    interior = stencil.Bounds(
-        tuple(b + w for b, w in zip(rb.lb, lo_w)),
-        tuple(b - w for b, w in zip(rb.ub, hi_w)),
+    core: stencil.Bounds = swap.temp.type.bounds
+    safe = _bounds_or_none(
+        tuple(b + w for b, w in zip(core.lb, lo_w)),
+        tuple(b - w for b, w in zip(core.ub, hi_w)),
     )
-    if any(u - l <= 0 for l, u in zip(interior.lb, interior.ub)):
+    interior = _intersect(rb, safe) if safe is not None else None
+    if interior is None:
         return None
-    return apply, interior, (lo_w, hi_w)
+    return apply, interior
 
 
 def _apply_halo_widths(apply: stencil.ApplyOp) -> tuple:
@@ -93,7 +119,7 @@ def _apply_halo_widths(apply: stencil.ApplyOp) -> tuple:
 def split_overlapped_applies(func: ir.FuncOp) -> ir.FuncOp:
     """Rewrite every tagged ``swap + apply`` pair into the explicit
     overlapped comm sequence (module docstring); preserves ``sym_name``."""
-    plans: dict = {}  # tagged swap -> (apply, interior, widths)
+    plans: dict = {}  # tagged swap -> (apply, interior)
     by_apply: dict = {}  # consumer apply -> [tagged swaps feeding it]
     declined: list = []  # tagged but ineligible: untag, lower-comm handles
     for op in func.body.ops:
@@ -104,6 +130,24 @@ def split_overlapped_applies(func: ir.FuncOp) -> ir.FuncOp:
                 continue
             plans[op] = plan
             by_apply.setdefault(plan[0], []).append(op)
+    # several tagged swaps feeding one apply: the interior safe from ALL
+    # in-flight exchanges is the intersection of the per-swap interiors
+    interiors: dict = {}
+    for apply, swaps in list(by_apply.items()):
+        interior = plans[swaps[0]][1]
+        for s in swaps[1:]:
+            interior = (
+                _intersect(interior, plans[s][1])
+                if interior is not None
+                else None
+            )
+        if interior is None:
+            declined.extend(swaps)
+            for s in swaps:
+                del plans[s]
+            del by_apply[apply]
+        else:
+            interiors[apply] = interior
     # clearing declined tags keeps the invariant that a tag reaching
     # lower_dmp_to_comm means the split pass never ran (it warns there)
     for op in declined:
@@ -137,14 +181,15 @@ def split_overlapped_applies(func: ir.FuncOp) -> ir.FuncOp:
             }
             continue
         if isinstance(op, stencil.ApplyOp) and op in by_apply:
-            _emit_split_apply(block, op, by_apply[op], plans, pending, vmap)
+            _emit_split_apply(
+                block, op, by_apply[op], interiors[op], pending, vmap
+            )
             continue
         block.add_op(op.clone_into(vmap))
     return new_func
 
 
-def _emit_split_apply(block, apply, swaps, plans, pending, vmap) -> None:
-    _, interior, (lo_w, hi_w) = plans[swaps[0]]
+def _emit_split_apply(block, apply, swaps, interior, pending, vmap) -> None:
     rb = apply.result_bounds
     padded_of = {s.results[0]: pending[s]["padded"] for s in swaps}
 
@@ -166,13 +211,16 @@ def _emit_split_apply(block, apply, swaps, plans, pending, vmap) -> None:
         exchanged_of[s.results[0]] = cur
         vmap[s.results[0]] = cur
 
-    # boundary frames on the fully exchanged operands
+    # boundary frames on the fully exchanged operands; the frame widths
+    # are whatever rb extends beyond the (possibly core-clipped) interior
     post_operands = [
         exchanged_of[o] if o in exchanged_of else vmap.get(o, o)
         for o in apply.operands
     ]
+    eff_lo = [il - rl for il, rl in zip(interior.lb, rb.lb)]
+    eff_hi = [ru - iu for ru, iu in zip(rb.ub, interior.ub)]
     frames = []
-    for slab in frame_slabs(rb, lo_w, hi_w):
+    for slab in frame_slabs(rb, eff_lo, eff_hi):
         frame = _clone_apply(apply, post_operands, slab, "frame")
         block.add_op(frame)
         frames.append(frame)

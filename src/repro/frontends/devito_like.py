@@ -27,7 +27,7 @@ from repro.api import Program, Target
 from repro.core import fd, ir
 from repro.core.builder import ApplyArgHandle, Expr, IRBuilder, build_apply
 from repro.core.dialects import stencil
-from repro.core.program import CompileOptions, time_loop
+from repro.core.program import CompileOptions, time_loop  # noqa: F401  (re-export)
 from repro.core.passes.decompose import SlicingStrategy
 
 
@@ -378,9 +378,15 @@ class Operator:
         options: Optional[CompileOptions] = None,
         target: Optional[Target] = None,
     ):
-        """Run ``timesteps`` with time-buffer rotation (oldest→newest)."""
-        step = self.compile_step(mesh, strategy, options, target)
-        return time_loop(step, tuple(state), timesteps)
+        """Run ``timesteps`` with time-buffer rotation (oldest→newest).
+
+        ``timesteps`` counts single time steps; a
+        ``Target(exchange_every=k)`` artifact advances k steps per call,
+        so the loop runs in epochs (``CompiledStencil.time_loop``)."""
+        artifact = api.compile(
+            self.program, self._target(mesh, strategy, options, target)
+        )
+        return artifact.time_loop(tuple(state), timesteps)
 
 
 def _collect_taps(n: Node) -> list:

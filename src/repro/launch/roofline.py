@@ -28,10 +28,12 @@ import json
 import os
 import re
 from dataclasses import dataclass, field
+from typing import Optional
 
 PEAK_FLOPS = 197e12   # bf16 / chip
 HBM_BW = 819e9        # bytes/s / chip
 LINK_BW = 50e9        # bytes/s / ICI link
+LINK_LATENCY = 2e-6   # per-message launch latency (collective-permute hop)
 
 COLLECTIVE_RE = re.compile(
     r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
@@ -76,16 +78,34 @@ def collective_bytes_from_hlo(hlo_text: str) -> dict:
 class RooflineTerms:
     """Generic three-term roofline of one compiled executable — the
     ``CompiledStencil.cost()`` payload (per-device quantities in, per-chip
-    seconds out)."""
+    seconds out).
+
+    The optional temporal-tiling terms describe the message-count vs
+    redundant-compute tradeoff of deep-halo epochs
+    (``Target(exchange_every=k)``): ``messages_per_epoch`` exchanges fire
+    *once* per epoch regardless of depth (their per-message launch latency
+    amortizes as 1/k), while every non-final step of the epoch computes a
+    shrinking frame of redundant boundary points
+    (``redundant_compute_factor``).  ``recommend_exchange_every`` picks
+    the k that minimizes the modeled per-step time, subject to the deep
+    halo fitting the shard."""
 
     flops: float
     bytes_accessed: float
     collectives: dict = field(default_factory=dict)
+    exchange_every: int = 1
+    messages_per_epoch: int = 0
+    step_halo: tuple = ()     # per-dim per-step halo width (max of lo/hi)
+    local_shape: tuple = ()   # local shard core extents
 
     def __post_init__(self) -> None:
         self.flops = float(self.flops)
         self.bytes_accessed = float(self.bytes_accessed)
         self.collectives = dict(self.collectives)
+        self.exchange_every = int(self.exchange_every)
+        self.messages_per_epoch = int(self.messages_per_epoch)
+        self.step_halo = tuple(self.step_halo)
+        self.local_shape = tuple(self.local_shape)
 
     @property
     def collective_bytes(self) -> float:
@@ -120,6 +140,79 @@ class RooflineTerms:
     def t_serial(self) -> float:
         return self.t_compute + self.t_memory + self.t_collective
 
+    # -- temporal-tiling tradeoff (message latency vs redundant compute) --
+    @property
+    def t_latency(self) -> float:
+        """Per-step exchange launch latency: one message volley per epoch,
+        amortized over the epoch's steps."""
+        return (
+            self.messages_per_epoch * LINK_LATENCY
+            / max(self.exchange_every, 1)
+        )
+
+    def redundant_compute_factor(self, k: Optional[int] = None) -> float:
+        """Mean compute volume of an epoch's steps relative to the core:
+        step j of k computes ``prod(n_d + 2·(k-j)·w_d)`` points, so the
+        factor is 1.0 at k=1 and grows with depth (surface/volume)."""
+        k = self.exchange_every if k is None else int(k)
+        if k <= 1 or not self.step_halo or not self.local_shape:
+            return 1.0
+        core = 1.0
+        for n in self.local_shape:
+            core *= n
+        if core == 0:
+            return 1.0
+        total = 0.0
+        for j in range(k):  # j = remaining growth steps (k-1 … 0)
+            vol = 1.0
+            for n, w in zip(self.local_shape, self.step_halo):
+                vol *= n + 2.0 * j * w
+            total += vol
+        return total / (k * core)
+
+    def feasible_exchange_every(self, k: int) -> bool:
+        """Deep halo of depth k must come out of the neighbour's core."""
+        if not self.step_halo or not self.local_shape:
+            return k == 1
+        return all(
+            w * k <= n for w, n in zip(self.step_halo, self.local_shape) if w
+        )
+
+    def step_time(self, k: int) -> float:
+        """Modeled per-step seconds at epoch depth ``k``, extrapolated from
+        this artifact's terms: work scales by the redundant-compute factor,
+        exchange *bytes* per step stay ~constant (k× deeper, 1/k as often),
+        exchange *latency* amortizes as 1/k.
+
+        The measured terms describe one *call* — a whole epoch of
+        ``self.exchange_every`` steps (its flops carry that depth's
+        redundancy, its collective bytes the depth-K halo) — so they are
+        normalized back to one clean step before extrapolating to k."""
+        depth = max(self.exchange_every, 1)
+        per_step_work = max(self.t_compute, self.t_memory) / (
+            depth * max(self.redundant_compute_factor(depth), 1.0)
+        )
+        t_lat = self.messages_per_epoch * LINK_LATENCY / max(k, 1)
+        return (
+            per_step_work * self.redundant_compute_factor(k)
+            + t_lat
+            + self.t_collective / depth
+        )
+
+    def recommend_exchange_every(self, max_k: int = 8) -> int:
+        """The epoch depth minimizing the modeled per-step time; 1 when
+        tiling cannot win (or the terms are not available)."""
+        if not self.step_halo or not self.local_shape or not any(self.step_halo):
+            return 1
+        best_k, best_t = 1, self.step_time(1)
+        for k in range(2, max_k + 1):
+            if not self.feasible_exchange_every(k):
+                continue
+            t = self.step_time(k)
+            if t < best_t:
+                best_k, best_t = k, t
+        return best_k
+
     def as_dict(self) -> dict:
         return {
             "flops": self.flops,
@@ -128,9 +221,14 @@ class RooflineTerms:
             "t_compute": self.t_compute,
             "t_memory": self.t_memory,
             "t_collective": self.t_collective,
+            "t_latency": self.t_latency,
             "t_overlapped": self.t_overlapped,
             "t_serial": self.t_serial,
             "dominant": self.dominant,
+            "exchange_every": self.exchange_every,
+            "messages_per_epoch": self.messages_per_epoch,
+            "redundant_compute_factor": self.redundant_compute_factor(),
+            "recommended_exchange_every": self.recommend_exchange_every(),
         }
 
 

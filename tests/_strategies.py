@@ -1,0 +1,73 @@
+"""Hypothesis strategies for random stencil programs.
+
+Built on the ``_hypothesis_compat`` shim (real hypothesis when installed,
+a seeded deterministic fallback otherwise), so the strategies stick to the
+shim's primitive set: draw a compact *descriptor* tuple and expand it into
+a `repro.api.Program` deterministically with a seeded numpy RNG.  Two
+descriptor draws with the same values always yield the same program —
+shrinkability and reproducibility come for free.
+
+Programs are generated rotation-closed (one input, one output buffer) so
+temporal tiling applies: rank 1 or 2, a chain/DAG of 1–3 applies, access
+offsets within radius 2, and either boundary condition.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from _hypothesis_compat import strategies as st
+
+# (seed, rank, n_applies, boundary) — the whole program derives from this
+program_descriptors = st.tuples(
+    st.integers(0, 10**6),
+    st.sampled_from([1, 2]),
+    st.sampled_from([1, 2, 3]),
+    st.sampled_from(["zero", "periodic"]),
+)
+
+exchange_everys = st.sampled_from([1, 2, 4])
+
+SHAPES = {1: (24,), 2: (16, 12)}
+
+
+def build_program(seed: int, rank: int, n_applies: int, boundary: str):
+    """Expand a descriptor into a verified Program.
+
+    The apply chain is a DAG: each apply reads 1–2 of the values produced
+    so far (the loaded field or earlier results) at random offsets within
+    radius 2, with random fp32 coefficients; the last result is stored.
+    """
+    from repro.frontends.oec_like import ProgramBuilder
+
+    rng = np.random.default_rng(seed)
+    shape = SHAPES[rank]
+    p = ProgramBuilder(f"hyp_{seed}_{rank}_{n_applies}", shape)
+    u = p.input("u")
+    out = p.output("out")
+    values = [p.load(u)]
+
+    def point_fn(offsets, coeffs):
+        def fn(b, *handles):
+            acc = None
+            for (arg_idx, off), c in zip(offsets, coeffs):
+                term = handles[arg_idx].at(*off) * float(c)
+                acc = term if acc is None else acc + term
+            return acc
+
+        return fn
+
+    for _ in range(n_applies):
+        n_args = int(rng.integers(1, min(2, len(values)) + 1))
+        arg_ids = rng.choice(len(values), size=n_args, replace=False)
+        args = [values[i] for i in arg_ids]
+        taps = []
+        for arg_idx in range(n_args):
+            for _ in range(int(rng.integers(1, 4))):
+                off = tuple(int(o) for o in rng.integers(-2, 3, size=rank))
+                taps.append((arg_idx, off))
+        # small, exactly-representable coefficients keep chained epochs
+        # from overflowing while staying bitwise-comparable
+        coeffs = rng.integers(1, 8, size=len(taps)) / 16.0
+        values.append(p.apply(args, point_fn(taps, coeffs)))
+    p.store(values[-1], out)
+    return p.finish(boundary=boundary)

@@ -218,6 +218,99 @@ def scenario_wide_halo():
     check("wide-halo-sdo8", got, want)
 
 
+def _step_n(step, u0, shape, n):
+    """n single steps with explicit rotation (p == q == 1 programs)."""
+    u = u0
+    for _ in range(n):
+        u = np.asarray(step(u, np.zeros(shape, np.float32))[0])
+    return u
+
+
+def scenario_exchange_every(k, boundary, overlap=False, backend="jnp",
+                            builder="jacobi", steps=8):
+    """Deep-halo temporal tiling under a real mesh: a depth-k epoch
+    (exchange once, step k times, redundant boundary compute) must stay
+    bitwise-equal to k single-exchange steps — crossed with overlap
+    (interior of step 1 rides the deep exchange) and backend."""
+    shape = (32, 32)
+    builder_fn = _jacobi if builder == "jacobi" else _box
+    prog = builder_fn(shape).finish(boundary=boundary)
+    rng = np.random.default_rng(42)
+    u0 = rng.standard_normal(shape).astype(np.float32)
+    want = _step_n(api_compile(prog), u0, shape, steps)
+
+    mesh = _mesh((2, 2), ("x", "y"))
+    base = api_compile(
+        prog, Target(mesh=mesh, strategy=make_strategy_2d((2, 2)),
+                     overlap=overlap, backend=backend)
+    )
+    tiled = api_compile(
+        prog, Target(mesh=mesh, strategy=make_strategy_2d((2, 2)),
+                     overlap=overlap, backend=backend, exchange_every=k)
+    )
+    got = u0
+    for _ in range(steps // k):
+        got = np.asarray(tiled(got, np.zeros(shape, np.float32))[0])
+    tol = 1e-6 if backend == "pallas" else 0.0
+    check(
+        f"exchange-every-{builder}-{boundary}-k{k}-overlap={overlap}-{backend}",
+        got, want, tol=tol,
+    )
+    # one exchange volley per k-step epoch: the tiled IR must not carry
+    # more exchange_start ops than the single-step IR (let alone k×)
+    from repro.core.dialects import comm
+
+    def starts(s):
+        return sum(
+            1 for op in s.local_ir.body.ops
+            if isinstance(op, comm.ExchangeStartOp)
+        )
+
+    assert starts(tiled) <= starts(base), (starts(tiled), starts(base))
+    if overlap:
+        names = [op.name for op in tiled.local_ir.body.ops]
+        first_apply = names.index("stencil.apply")
+        assert names.index("comm.exchange_start") < first_apply < names.index(
+            "comm.wait"
+        ), f"step-1 interior does not overlap the deep exchange: {names}"
+
+
+def scenario_heat_epoch():
+    """ISSUE 4 acceptance: the fig7 heat kernel on a 4-shard mesh with
+    exchange_every=4 emits exactly ONE exchange pair per 4-step epoch
+    (asserted on .local_ir) and is bitwise-equal to exchange_every=1
+    over 32 steps."""
+    shape = (64, 32)
+    g = Grid(shape=shape, extent=(1.0, 1.0))
+    u = TimeFunction(name="u", grid=g, space_order=2)
+    dt = 0.1 * (g.spacing[0] ** 2) / 0.5
+    op = Operator(Eq(u.dt, 0.5 * u.laplace), dt=dt, boundary="periodic")
+    rng = np.random.default_rng(8)
+    u0 = rng.standard_normal(shape).astype(np.float32)
+    want = np.asarray(op.apply([u0], timesteps=32)[0])
+
+    import jax.numpy as jnp
+
+    mesh = _mesh((4,), ("x",))
+    tiled = api_compile(
+        op.program,
+        Target(mesh=mesh, strategy=make_strategy_1d(4), exchange_every=4),
+    )
+    got = np.asarray(tiled.time_loop((jnp.asarray(u0),), 32)[0])
+    from repro.core.dialects import comm
+
+    starts = [
+        o for o in tiled.local_ir.body.ops
+        if isinstance(o, comm.ExchangeStartOp)
+    ]
+    waits = [
+        o for o in tiled.local_ir.body.ops if isinstance(o, comm.WaitOp)
+    ]
+    # 1-D decomposition: one send/recv pair (low + high face) per epoch
+    assert len(starts) == 2 and len(waits) == 1, (len(starts), len(waits))
+    check("heat-epoch-k4-32steps", got, want)
+
+
 def scenario_time_loop():
     """Many timesteps under fori_loop + distribution (the fig. 8 path)."""
     shape = (64, 32)
@@ -256,6 +349,18 @@ SCENARIOS = {
     "pallas": lambda: scenario_options("pallas"),
     "wide-halo": scenario_wide_halo,
     "time-loop": scenario_time_loop,
+    # deep-halo temporal tiling: exchange_every × overlap × backend
+    "ee2-periodic": lambda: scenario_exchange_every(2, "periodic"),
+    "ee4-zero": lambda: scenario_exchange_every(4, "zero"),
+    "ee4-overlap": lambda: scenario_exchange_every(4, "periodic", overlap=True),
+    "ee4-overlap-zero": lambda: scenario_exchange_every(4, "zero", overlap=True),
+    "ee2-box-overlap": lambda: scenario_exchange_every(
+        2, "periodic", overlap=True, builder="box"
+    ),
+    "ee4-pallas": lambda: scenario_exchange_every(
+        4, "periodic", backend="pallas"
+    ),
+    "ee-heat-epoch": scenario_heat_epoch,
 }
 
 

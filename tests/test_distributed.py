@@ -31,6 +31,13 @@ SCENARIOS = [
     "pallas",
     "wide-halo",
     "time-loop",
+    "ee2-periodic",
+    "ee4-zero",
+    "ee4-overlap",
+    "ee4-overlap-zero",
+    "ee2-box-overlap",
+    "ee4-pallas",
+    "ee-heat-epoch",
 ]
 
 

@@ -280,6 +280,110 @@ def test_lower_comm_warns_on_unsplit_overlap_tag():
         lower_dmp_to_comm(local)
 
 
+# -------------------------------------------------------------------------
+# temporal_tile: golden op sequences (one exchange per epoch)
+# -------------------------------------------------------------------------
+
+
+def _tiled(func, spec, boundary="periodic"):
+    ctx = PipelineContext(
+        strategy=make_strategy_2d((2, 2)), boundary=boundary
+    )
+    out, _ = run_pipeline(func, spec, ctx)
+    return out
+
+
+def test_temporal_tile_golden_sequence():
+    """k=2 epoch of the star stencil: ONE deep exchange (sequential —
+    S∘S has a diamond footprint, so corners must be forwarded), then the
+    two cloned applies, then the store."""
+    split = _tiled(
+        _jacobi_prog(),
+        "decompose,swap-elim,temporal-tile{k=2},lower-comm",
+    )
+    names = [op.name for op in split.body.ops]
+    assert names == (
+        ["stencil.load", "comm.halo_pad"]
+        + ["comm.exchange_start"] * 2 + ["comm.wait"]   # axis-0 round
+        + ["comm.exchange_start"] * 2 + ["comm.wait"]   # axis-1 (forwarded)
+        + ["stencil.apply"] * 2                         # step 1 grown, step 2 core
+        + ["stencil.store", "func.return"]
+    ), names
+
+
+def test_temporal_tile_scales_halo_extents():
+    local = decompose_stencil(
+        _jacobi_prog(), make_strategy_2d((2, 2)), boundary="periodic"
+    )
+    eliminate_redundant_swaps(local)
+    from repro.core.passes import temporal_tile
+
+    tiled = temporal_tile(local, 4)
+    ir.verify_module(tiled)
+    (swap,) = [op for op in tiled.body.ops if isinstance(op, dmp.SwapOp)]
+    assert swap.halo_widths() == ((4, 4), (4, 4))  # per-step 1 × k=4
+    applies = [op for op in tiled.body.ops if isinstance(op, stencil.ApplyOp)]
+    assert [a.attributes["epoch_step"].value for a in applies] == [1, 2, 3, 4]
+    # local core 16×16; step j computes core + (k-j) redundant frame
+    assert [a.result_bounds.shape for a in applies] == [
+        (22, 22), (20, 20), (18, 18), (16, 16)
+    ]
+
+
+def test_temporal_tile_overlap_split_still_applied():
+    """temporal-tile composes with the overlap split: step 1's interior
+    (clipped to the pre-exchange core minus its reads) overlaps the deep
+    exchange; frames + later steps run after the waits."""
+    split = _tiled(
+        _jacobi_prog(),
+        "decompose,swap-elim,temporal-tile{k=2},overlap,lower-comm",
+    )
+    names = [op.name for op in split.body.ops]
+    first_apply = names.index("stencil.apply")
+    assert names.index("comm.exchange_start") < first_apply
+    assert first_apply < names.index("comm.wait"), names
+    assert "stencil.combine" in names
+    applies = [op for op in split.body.ops if isinstance(op, stencil.ApplyOp)]
+    interior = applies[0]
+    assert interior.attributes["part"].value == "interior"
+    # the interior may not read exchanged halo points: core 16² shrunk by
+    # the step-1 access extent, NOT the grown 18² result shrunk by 1
+    assert interior.result_bounds.shape == (14, 14)
+    (combine,) = [op for op in split.body.ops if isinstance(op, stencil.CombineOp)]
+    assert combine.result_bounds.shape == (18, 18)  # step 1 output, grown
+    covered = sum(int(np.prod(p.type.bounds.shape)) for p in combine.operands)
+    assert covered == 18 * 18  # interior + frames tile the grown domain
+    # the final (core) step runs on the combined value, after every wait
+    assert applies[-1].result_bounds.shape == (16, 16)
+
+
+def test_temporal_tile_zero_bc_masks_in_sequence():
+    split = _tiled(
+        _jacobi_prog(),
+        "decompose,swap-elim,temporal-tile{k=2},lower-comm",
+        boundary="zero",
+    )
+    names = [op.name for op in split.body.ops]
+    # exactly one mask: the grown step-1 result, re-clamped to the
+    # physical domain before step 2 reads it
+    assert names.count("comm.boundary_mask") == 1
+    assert names.index("comm.boundary_mask") > names.index("stencil.apply")
+    assert names.index("comm.boundary_mask") < len(names) - 1 - names[::-1].index(
+        "stencil.apply"
+    )
+
+
+def test_temporal_tile_via_spec_matches_flag_surface():
+    from repro.api import Target
+
+    spec = Target(exchange_every=4).pipeline_spec()
+    assert "temporal-tile{k=4}" in spec
+    assert spec.index("swap-elim") < spec.index("temporal-tile")
+    assert spec.index("temporal-tile") < spec.index("lower-comm")
+    parsed = parse_pipeline(spec)
+    assert ("temporal-tile", {"k": "4"}) in parsed
+
+
 def test_pipeline_overlap_semantics_single_device():
     rng = np.random.default_rng(11)
     u0 = rng.standard_normal((24, 24)).astype(np.float32)
