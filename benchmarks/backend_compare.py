@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import gpts, save_record, table, time_step
+from benchmarks.common import gpts, save_record, table, target_record, time_step
 from repro.api import Target
 from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
 
@@ -26,14 +26,16 @@ def _hlo_op_count(fn, *args) -> int:
 
 
 def run(fast: bool = False, overlap: str = "off",
-        exchange_every: int = 1) -> dict:
+        exchange_every: int = 1, tune: bool = False) -> dict:
     """``overlap="on"`` adds a variant compiled through the IR-level
     ``split_overlapped_applies`` path (interior/frame split + combine),
     so the rewrite's overhead/win is measurable against ``jnp_opt`` on
     the same hardware.  ``exchange_every=k`` adds a temporally-tiled
     variant (one exchange epoch, k steps per call): its output after one
     epoch must equal k sequential ``jnp_opt`` steps, and its throughput
-    is reported *per step* so the redundant-compute overhead is visible."""
+    is reported *per step* so the redundant-compute overhead is visible.
+    ``tune=True`` adds the autotuner's winner (``Target.tuned``,
+    measured search) as a variant, recorded with tuned provenance."""
     shape = (256, 256) if fast else (1024, 1024)
     g = Grid(shape=shape, extent=(1.0, 1.0))
     u = TimeFunction(name="u", grid=g, space_order=8)
@@ -59,7 +61,11 @@ def run(fast: bool = False, overlap: str = "off",
             ref_out = out
         np.testing.assert_allclose(out, ref_out, rtol=1e-5, atol=1e-6)
         sec = time_step(lambda a: step(a), (u0,), iters=3, warmup=1)
-        record[name] = {"sec": sec, "gpts": gpts(shape, sec)}
+        record[name] = {
+            "sec": sec,
+            "gpts": gpts(shape, sec),
+            "target": target_record(target, "manual"),
+        }
         rows.append((name, f"{gpts(shape, sec):.3f}", "allclose ✓"))
 
     if exchange_every > 1:
@@ -82,9 +88,43 @@ def run(fast: bool = False, overlap: str = "off",
         )
         sec = time_step(lambda a: epoch_step(a), (u0,), iters=3, warmup=1) / k
         name = f"jnp_opt_ee{k}"
-        record[name] = {"sec": sec, "gpts": gpts(shape, sec)}
+        record[name] = {
+            "sec": sec,
+            "gpts": gpts(shape, sec),
+            "target": target_record(
+                Target(backend="jnp", fuse=True, cse=True, exchange_every=k),
+                "manual",
+            ),
+        }
         rows.append((name, f"{gpts(shape, sec):.3f}",
                      f"allclose == {k}× jnp_opt"))
+
+    if tune:
+        # the autotuner's pick for this program on this machine (measured
+        # search, persisted in the on-disk tune cache); validated against
+        # k sequential jnp_opt steps like the manual epoch variant
+        op = Operator(Eq(u.dt, 0.5 * u.laplace), dt=1e-7, boundary="zero")
+        tuned_target = Target.tuned(
+            op.program, ranks=1, measure=True, steps=4, trials=2,
+        )
+        k = tuned_target.exchange_every
+        tuned_step = op.compile_step(target=tuned_target)
+        base_step = op.compile_step(target=variants["jnp_opt"])
+        want = u0
+        for _ in range(k):
+            want = base_step(want)[0]
+        got = tuned_step(u0)[0]
+        np.testing.assert_allclose(
+            np.asarray(want), np.asarray(got), rtol=1e-5, atol=1e-5
+        )
+        sec = time_step(lambda a: tuned_step(a), (u0,), iters=3, warmup=1) / k
+        record["tuned"] = {
+            "sec": sec,
+            "gpts": gpts(shape, sec),
+            "target": target_record(tuned_target, "tuned"),
+        }
+        rows.append(("tuned", f"{gpts(shape, sec):.3f}",
+                     f"autotuned (k={k}, backend={tuned_target.backend})"))
 
     print(table("backend comparison (so8 heat, one IR → N backends)", rows,
                 ["backend", "GPts/s", "vs jnp_raw"]))
@@ -101,5 +141,8 @@ if __name__ == "__main__":
     ap.add_argument("--exchange-every", type=int, default=1,
                     help="epoch depth k: adds a one-exchange-per-k-steps "
                          "variant (bitwise-checked against k jnp_opt steps)")
+    ap.add_argument("--tune", action="store_true",
+                    help="add the repro.tune winner as a measured variant")
     a = ap.parse_args()
-    run(fast=a.fast, overlap=a.overlap, exchange_every=a.exchange_every)
+    run(fast=a.fast, overlap=a.overlap, exchange_every=a.exchange_every,
+        tune=a.tune)

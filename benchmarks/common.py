@@ -44,6 +44,19 @@ def save_record(name: str, record: dict) -> None:
         json.dump(record, f, indent=1)
 
 
+def target_record(target, provenance: str = "manual") -> dict:
+    """The full ``Target`` as a JSON-able dict for results records —
+    every knob plus where the config came from (``"manual"`` for a
+    hand-picked target, ``"tuned"`` for an autotuner winner), so a
+    benchmark number can always be traced back to the exact
+    configuration that produced it."""
+    from repro.tune.cache import target_to_dict
+
+    record = target_to_dict(target)
+    record["provenance"] = provenance
+    return record
+
+
 def table(title: str, rows: list, headers: list) -> str:
     widths = [
         max(len(str(h)), max((len(str(r[i])) for r in rows), default=0))

@@ -108,13 +108,49 @@ def _tiling_sweep(record: dict, ranks: list, exchange_every: tuple) -> list:
     return rows
 
 
+def _tune_rows(record: dict, ranks: list) -> list:
+    """Autotuner view of the scaling table: feed each rank count's
+    modeled stats through the *shared* roofline terms
+    (``launch/roofline.RooflineTerms``) and report the epoch depth the
+    autotuner would pick (``recommend_exchange_every``) with its modeled
+    per-step ranking — the same code path ``repro.tune`` scores live
+    candidates with."""
+    from repro.launch.roofline import RooflineTerms
+
+    rows = []
+    for kind in ("heat",):
+        for R in ranks:
+            st = record[f"{kind}_r{R}"]
+            local = tuple(G // r for G, r in zip(GLOBAL, RANK_GRIDS[R]))
+            terms = RooflineTerms(
+                flops=st["local_points"] * st["flops_per_point"],
+                bytes_accessed=st["local_points"] * 12,
+                collectives={"collective-permute": st["halo_bytes"]},
+                exchange_every=1,
+                messages_per_epoch=2 * len(local),
+                step_halo=(2,) * len(local),  # so4 taps reach ±2
+                local_shape=local,
+            )
+            ranked = terms.ranked_exchange_every(max_k=8)
+            best_k, best_t = ranked[0]
+            record[f"{kind}_r{R}"]["tuned_exchange_every"] = best_k
+            record[f"{kind}_r{R}"]["tuned_step_time"] = best_t
+            rows.append((
+                kind, R, best_k, f"{best_t * 1e6:.0f}",
+                " ".join(f"k{k}:{t*1e6:.0f}µs" for k, t in ranked[:3]),
+            ))
+    return rows
+
+
 def run(fast: bool = False, overlap: str = "both",
-        exchange_every: tuple = (1,)) -> dict:
+        exchange_every: tuple = (1,), tune: bool = False) -> dict:
     """``overlap`` selects the latency-hiding regime to report: "off" is
     the paper's blocking exchange (t_comp + t_comm), "on" is the
     split-overlapped pipeline (max(t_comp, t_comm) — the IR-level
     ``split_overlapped_applies`` rewrite), "both" prints the two columns
-    side by side so the win is explicit in the perf trajectory."""
+    side by side so the win is explicit in the perf trajectory.
+    ``tune=True`` appends the shared roofline model's recommended epoch
+    depth per rank count (the quantity ``repro.tune`` searches for)."""
     assert overlap in ("on", "off", "both")
     record, rows = {"overlap": overlap}, []
     ranks = list(RANK_GRIDS) if not fast else [8, 64]
@@ -162,6 +198,12 @@ def run(fast: bool = False, overlap: str = "both",
             tile_rows,
             ["kernel", "ranks"] + [f"k={k}" for k in exchange_every],
         ))
+    if tune:
+        print(table(
+            "fig8: autotuner recommendation (RooflineTerms per rank count)",
+            _tune_rows(record, ranks),
+            ["kernel", "ranks", "best k", "t_step µs", "ranking"],
+        ))
     # structural assertion recorded for EXPERIMENTS.md: halo bytes per
     # rank shrink as ranks grow (surface/volume)
     hb = [record[f"heat_r{R}"]["halo_bytes"] for R in ranks]
@@ -178,6 +220,10 @@ if __name__ == "__main__":
     ap.add_argument("--overlap", choices=["on", "off", "both"], default="both")
     ap.add_argument("--exchange-every", default="1",
                     help="comma list of epoch depths to sweep, e.g. 1,2,4,8")
+    ap.add_argument("--tune", action="store_true",
+                    help="append the roofline model's recommended epoch "
+                         "depth per rank count")
     a = ap.parse_args()
     run(fast=a.fast, overlap=a.overlap,
-        exchange_every=tuple(int(k) for k in a.exchange_every.split(",")))
+        exchange_every=tuple(int(k) for k in a.exchange_every.split(",")),
+        tune=a.tune)

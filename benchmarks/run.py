@@ -10,6 +10,7 @@ table1   backend comparison (jnp vs pallas; raw vs optimized pipeline)
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -18,6 +19,10 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="reduced sizes (CI)")
     ap.add_argument("--only", default=None, help="comma-list of benches")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune Targets (repro.tune) in benches that "
+                         "support it; records carry tuned-vs-manual "
+                         "provenance")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -40,8 +45,11 @@ def main() -> int:
     for name in wanted:
         print(f"\n=== {name} ===")
         t0 = time.time()
+        kwargs = {"fast": args.fast}
+        if args.tune and "tune" in inspect.signature(benches[name]).parameters:
+            kwargs["tune"] = True
         try:
-            benches[name](fast=args.fast)
+            benches[name](**kwargs)
             print(f"[{name} done in {time.time()-t0:.1f}s]")
         except Exception as e:  # pragma: no cover
             failures += 1

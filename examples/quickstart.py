@@ -23,6 +23,9 @@ def main() -> None:
     ap.add_argument("--ranks", type=int, default=1)
     ap.add_argument("--size", type=int, default=256)
     ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--tune", action="store_true",
+                    help="let repro.tune pick the Target (cost-model "
+                         "search, persisted in ~/.cache/repro-tune)")
     args = ap.parse_args()
 
     import jax.numpy as jnp
@@ -43,8 +46,23 @@ def main() -> None:
 
     # -- 2. describe the target -------------------------------------------
     # Target.auto() discovers devices (1-D decomposition over all of them);
-    # an explicit Target(mesh=..., strategy=...) pins the layout.
-    target = repro.Target.auto(ranks=args.ranks)
+    # an explicit Target(mesh=..., strategy=...) pins the layout; and
+    # Target.tuned(prog) searches the whole space (mesh factorization,
+    # overlap, exchange_every, backend, tile) with the roofline model —
+    # the winner persists on disk, so the search runs once per machine:
+    #
+    #     target = repro.Target.tuned(prog)               # measured search
+    #     target = repro.Target.tuned(prog, measure=False)  # cost model only
+    #     step = repro.api.compile(prog, tune=True)         # tune + compile
+    if args.tune:
+        target = repro.Target.tuned(
+            prog, ranks=args.ranks, measure=False
+        )
+        print(f"tuned target: backend={target.backend} "
+              f"exchange_every={target.exchange_every} "
+              f"overlap={target.overlap} distributed={target.distributed}")
+    else:
+        target = repro.Target.auto(ranks=args.ranks)
     if target.distributed:
         print(f"decomposed over {args.ranks} ranks (1-D slabs + halo swaps)")
 
@@ -64,6 +82,11 @@ def main() -> None:
     c = args.size // 2
     u0[c - 8 : c + 8, c - 8 : c + 8] = 1.0
 
+    # a depth-k tuned artifact advances whole epochs: round the step
+    # count up to a multiple of k
+    k = target.exchange_every
+    if args.steps % k:
+        args.steps += k - args.steps % k
     (uT,) = step.time_loop([jnp.asarray(u0)], args.steps)
     uT = np.asarray(uT)
 

@@ -138,6 +138,44 @@ print(f"temporal smoke OK: starts/epoch k=1: {starts(s1)}, k=4: {starts(s4)}, "
       "4-step outputs bitwise-equal")
 EOF
 
+echo "== tune smoke =="
+python - <<'EOF'
+# cost-model-only autotuning of the heat program must return a valid
+# cached Target; the second search must hit the on-disk cache
+import os
+import tempfile
+
+os.environ["REPRO_TUNE_CACHE"] = tempfile.mkdtemp(prefix="repro-tune-smoke-")
+
+from repro import api
+from repro.tune import cache_stats, tune
+from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
+
+grid = Grid(shape=(64, 64), extent=(1.0, 1.0))
+u = TimeFunction(name="u", grid=grid, space_order=2)
+dt = 0.8 * grid.spacing[0] ** 2 / (4 * 0.5)
+prog = Operator(Eq(u.dt, 0.5 * u.laplace), dt=dt, boundary="zero").program
+
+r1 = tune(prog, measure=False)
+assert not r1.from_cache, "first search must be a cache miss"
+assert cache_stats().misses == 1 and cache_stats().stores == 1, (
+    cache_stats().as_dict()
+)
+api.compile(prog, r1.target)  # the winner is a valid, compilable Target
+unpruned = [c for c in r1.candidates if not c.pruned]
+assert unpruned and all(
+    r1.winner.modeled_s <= c.modeled_s for c in unpruned
+), "winner must have the minimal modeled step time among unpruned candidates"
+
+r2 = tune(prog, measure=False)
+assert r2.from_cache, "second search must hit the persistent cache"
+assert cache_stats().hits == 1, cache_stats().as_dict()
+assert r2.target.fingerprint == r1.target.fingerprint
+print(f"tune smoke OK: winner {r1.winner.describe()!r}, "
+      f"{len(r1.candidates)} candidates ({len(unpruned)} unpruned), "
+      f"stats={cache_stats().as_dict()}")
+EOF
+
 if [[ "${1:-}" == "--smoke" ]]; then
   echo "smoke only: skipping tier-1 tests"
   exit 0

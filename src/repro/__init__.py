@@ -11,6 +11,7 @@ API is touched).
 
 __all__ = [
     "api",
+    "tune",
     "Program",
     "Target",
     "TargetError",
@@ -22,6 +23,10 @@ __all__ = [
 
 
 def __getattr__(name: str):
+    if name == "tune":
+        import repro.tune as tune
+
+        return tune
     if name in __all__:
         import repro.api as api
 

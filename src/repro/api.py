@@ -251,6 +251,27 @@ class Target:
             **overrides,
         )
 
+    @classmethod
+    def tuned(
+        cls,
+        program: "Program",
+        ranks: Optional[int] = None,
+        *,
+        measure: bool = True,
+        cache: bool = True,
+        **tune_kwargs,
+    ) -> "Target":
+        """The autotuned target for ``program`` on this machine
+        (``repro.tune``): enumerate the mesh/overlap/exchange_every/
+        backend/tile space, score it with the roofline model, optionally
+        measure the survivors, and return the winner — persisted on disk
+        so a second call (any process, same hardware) is a cache hit."""
+        from repro.tune import tune
+
+        return tune(
+            program, ranks=ranks, measure=measure, cache=cache, **tune_kwargs
+        ).target
+
     # ------------------------------------------------------------------
     def pipeline_spec(self) -> str:
         """The pass-pipeline spec this target denotes (explicit ``pipeline``
@@ -534,13 +555,31 @@ def trivial_strategy(rank: int) -> SlicingStrategy:
     return SlicingStrategy((1,) * rank, names, tuple(range(rank)))
 
 
-def compile(program: Program, target: Optional[Target] = None) -> CompiledStencil:
+def compile(
+    program: Program,
+    target: Optional[Target] = None,
+    *,
+    tune=None,
+) -> CompiledStencil:
     """Compile ``program`` for ``target`` (default: single device).
+
+    ``tune=True`` (or a dict of ``repro.tune.tune`` keyword arguments)
+    picks the target automatically via the autotuner instead —
+    mutually exclusive with an explicit ``target``.
 
     Cached process-wide on ``(program.fingerprint, target.fingerprint)``:
     a repeated compile of the same program + target returns the same
     ``CompiledStencil`` without re-running the pass pipeline or
     re-tracing, and its jit cache carries over."""
+    if tune:
+        if target is not None:
+            raise ValueError(
+                "pass either target= or tune=, not both (tune selects "
+                "the target)"
+            )
+        target = Target.tuned(
+            program, **(tune if isinstance(tune, dict) else {})
+        )
     target = target or Target()
     _validate_for_program(program, target)
     # the fingerprint is taken at Program construction; a func mutated
@@ -571,8 +610,56 @@ def _validate_for_program(program: Program, target: Target) -> None:
                             f"dim {d} extent {extent} of {program.name!r} not "
                             f"divisible by grid size {g}"
                         )
+    if target.backend == "pallas" and target.pallas_tile is not None:
+        _validate_pallas_tile(program, target)
     if target.exchange_every > 1:
         _validate_exchange_every(program, target)
+
+
+def _validate_pallas_tile(program: Program, target: Target) -> None:
+    """A user tile must divide the *local shard* shape the kernel will
+    see — caught here with a named error, not by the divisibility assert
+    deep inside ``core/lowering``.  Split-overlapped and epoch-tiled
+    applies re-tile automatically (their per-part shapes vary), so only
+    their tile *rank* is checked."""
+    tile = target.pallas_tile
+    if not program.field_args:
+        return
+    rank = program.rank
+    if len(tile) != rank:
+        raise TargetError(
+            f"pallas_tile {tile} has {len(tile)} dims but program "
+            f"{program.name!r} is rank-{rank}"
+        )
+    if any(int(t) < 1 for t in tile):
+        raise TargetError(f"pallas_tile {tile} must be positive")
+    spec = target.pipeline_spec()
+    if "overlap" in spec or "temporal-tile" in spec:
+        return  # lowering auto-tiles split/epoched applies that mismatch
+    s = target.strategy
+    grid_of_dim = {}
+    if s is not None:
+        for g, ax, d in zip(s.grid_shape, s.axis_names, s.dims):
+            grid_of_dim[d] = (g, ax)
+    shape = program.field_args[0].type.bounds.shape
+    local = tuple(
+        shape[d] // grid_of_dim.get(d, (1, None))[0] for d in range(rank)
+    )
+    for d in range(rank):
+        if local[d] % tile[d] != 0:
+            g, ax = grid_of_dim.get(d, (1, None))
+            where = (
+                f"decomposed over mesh axis {ax!r} (grid {g})"
+                if ax is not None and g > 1
+                else "undecomposed"
+            )
+            raise TargetError(
+                f"pallas_tile {tile} does not divide the local shard "
+                f"shape {local} of program {program.name!r}: dim {d} "
+                f"extent {local[d]} is not a multiple of tile {tile[d]} "
+                f"({where}); pick a tile dividing the shard or drop "
+                f"pallas_tile for auto-tiling"
+            )
 
 
 def _validate_exchange_every(program: Program, target: Target) -> None:

@@ -199,19 +199,25 @@ class RooflineTerms:
             + self.t_collective / depth
         )
 
+    def ranked_exchange_every(self, max_k: int = 8) -> list:
+        """Every feasible epoch depth with its modeled per-step seconds,
+        best first (ties resolve to the shallower epoch).  ``[(1,
+        step_time(1))]`` when the tiling terms are unavailable — the
+        ranking the autotuner (``repro.tune``) and the fig8 ``--tune``
+        sweep print."""
+        if not self.step_halo or not self.local_shape or not any(self.step_halo):
+            return [(1, self.step_time(1))]
+        pairs = [(1, self.step_time(1))] + [
+            (k, self.step_time(k))
+            for k in range(2, max(int(max_k), 1) + 1)
+            if self.feasible_exchange_every(k)
+        ]
+        return sorted(pairs, key=lambda kt: (kt[1], kt[0]))
+
     def recommend_exchange_every(self, max_k: int = 8) -> int:
         """The epoch depth minimizing the modeled per-step time; 1 when
         tiling cannot win (or the terms are not available)."""
-        if not self.step_halo or not self.local_shape or not any(self.step_halo):
-            return 1
-        best_k, best_t = 1, self.step_time(1)
-        for k in range(2, max_k + 1):
-            if not self.feasible_exchange_every(k):
-                continue
-            t = self.step_time(k)
-            if t < best_t:
-                best_k, best_t = k, t
-        return best_k
+        return self.ranked_exchange_every(max_k)[0][0]
 
     def as_dict(self) -> dict:
         return {

@@ -1,0 +1,51 @@
+"""repro.tune — roofline-guided autotuning of ``Target`` configurations.
+
+The compile surface (PR 3) exposes a multi-dimensional ``Target`` space:
+mesh factorization, comm/compute overlap, temporal-tiling depth
+(``exchange_every``), backend and pallas tile.  This package searches it
+automatically:
+
+    from repro.tune import tune
+    result = tune(program)                 # enumerate → model → measure
+    step = repro.compile(program, result.target)
+
+or through the compile surface itself:
+
+    target = repro.Target.tuned(program)           # same search, cached
+    step = repro.api.compile(program, tune=True)   # tune + compile
+
+``tune(measure=False)`` selects on the shared roofline model alone (no
+timed runs); results persist on disk (``tune.cache``) keyed by program
+fingerprint × hardware signature × rank count, so tuned configurations
+survive processes and ship with benchmark results.
+
+    python -m repro.tune            # ranked table for the fig7 heat kernel
+"""
+from repro.tune.cache import (
+    cache_dir,
+    cache_stats,
+    hardware_signature,
+    reset_cache_stats,
+    target_from_dict,
+    target_to_dict,
+)
+from repro.tune.measure import agree_on_times, measure_compiled
+from repro.tune.search import TuneResult, prune_candidates, score_candidates, tune
+from repro.tune.space import Candidate, enumerate_candidates
+
+__all__ = [
+    "Candidate",
+    "TuneResult",
+    "agree_on_times",
+    "cache_dir",
+    "cache_stats",
+    "enumerate_candidates",
+    "hardware_signature",
+    "measure_compiled",
+    "prune_candidates",
+    "reset_cache_stats",
+    "score_candidates",
+    "target_from_dict",
+    "target_to_dict",
+    "tune",
+]

@@ -1,0 +1,261 @@
+"""Persistent on-disk tuning cache.
+
+Tuned configurations outlive the process that searched for them: a JSON
+entry per cache key under ``$REPRO_TUNE_CACHE`` (or
+``~/.cache/repro-tune/``), keyed by
+
+    sha256(schema | program fingerprint | hardware signature |
+           rank count | search-options digest)
+
+so a result is only reused when the program, the hardware it was tuned
+on, the rank count *and* the search configuration all match.  Entries
+carry a ``schema`` version: bumping ``SCHEMA_VERSION`` invalidates every
+old entry (they read as misses, never as wrong answers).
+
+``Target`` serialization lives here too (``target_to_dict`` /
+``target_from_dict``): a mesh is stored as (axis names, axis sizes) and
+re-materialized from the *current* device inventory at load time; the
+stored target fingerprint is re-checked after reconstruction, so an
+entry written on different devices misses instead of lying.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import time
+from typing import Optional, Sequence
+
+SCHEMA_VERSION = 1
+
+
+class TuneCacheError(ValueError):
+    """A cache entry that cannot be rebuilt on this machine (not enough
+    devices, unknown fields) — callers treat it as a miss."""
+
+
+def cache_dir() -> str:
+    """``$REPRO_TUNE_CACHE`` or ``~/.cache/repro-tune``; not created
+    until the first ``store``."""
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(
+        os.environ.get("XDG_CACHE_HOME", os.path.expanduser("~/.cache")),
+        "repro-tune",
+    )
+
+
+@dataclasses.dataclass
+class TuneCacheStats:
+    hits: int = 0
+    misses: int = 0
+    stores: int = 0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses, "stores": self.stores}
+
+
+_STATS = TuneCacheStats()
+
+
+def cache_stats() -> TuneCacheStats:
+    """Process-wide tuning-cache counters (disk hits/misses/stores)."""
+    return _STATS
+
+
+def reset_cache_stats() -> None:
+    _STATS.hits = 0
+    _STATS.misses = 0
+    _STATS.stores = 0
+
+
+# --------------------------------------------------------------------------
+# keys
+# --------------------------------------------------------------------------
+
+
+def hardware_signature(devices: Optional[Sequence] = None) -> str:
+    """Stable description of the device inventory a tuning ran on:
+    platform, device kind, and count — the quantities that change the
+    winner (not device *ids*, which vary per process)."""
+    if devices is None:
+        import jax
+
+        devices = jax.devices()
+    d = devices[0]
+    kind = getattr(d, "device_kind", "") or d.platform
+    return f"{d.platform}:{kind}:n{len(devices)}"
+
+
+def options_digest(**options) -> str:
+    """Digest of the search options that change the candidate space (and
+    therefore the winner's identity): measurement on/off, backends, epoch
+    depths, pruning knobs."""
+    text = json.dumps(options, sort_keys=True, default=str)
+    return hashlib.sha256(text.encode()).hexdigest()[:12]
+
+
+def cache_key(
+    program_fingerprint: str,
+    hardware: str,
+    n_ranks: int,
+    options: str,
+) -> str:
+    text = "\n".join(
+        [
+            f"schema={SCHEMA_VERSION}",
+            f"program={program_fingerprint}",
+            f"hardware={hardware}",
+            f"ranks={int(n_ranks)}",
+            f"options={options}",
+        ]
+    )
+    return hashlib.sha256(text.encode()).hexdigest()[:24]
+
+
+def entry_path(key: str) -> str:
+    return os.path.join(cache_dir(), f"{key}.json")
+
+
+# --------------------------------------------------------------------------
+# Target <-> dict
+# --------------------------------------------------------------------------
+
+
+def target_to_dict(target) -> dict:
+    """JSON-able description of a ``repro.api.Target`` (devices elided —
+    the mesh is stored as axis names + sizes)."""
+    d = {
+        "backend": target.backend,
+        "pipeline": target.pipeline,
+        "fuse": target.fuse,
+        "cse": target.cse,
+        "overlap": target.overlap,
+        "diagonal": target.diagonal,
+        "exchange_every": target.exchange_every,
+        "pallas_interpret": target.pallas_interpret,
+        "pallas_tile": list(target.pallas_tile) if target.pallas_tile else None,
+        "donate": target.donate,
+        "jit": target.jit,
+        "mesh": None,
+        "strategy": None,
+        "fingerprint": target.fingerprint,
+    }
+    if target.mesh is not None:
+        d["mesh"] = {
+            "axes": list(target.mesh.axis_names),
+            "shape": [int(target.mesh.shape[a]) for a in target.mesh.axis_names],
+        }
+    if target.strategy is not None:
+        s = target.strategy
+        d["strategy"] = {
+            "grid": list(s.grid_shape),
+            "axes": list(s.axis_names),
+            "dims": list(s.dims),
+        }
+    return d
+
+
+def target_from_dict(d: dict, devices: Optional[Sequence] = None):
+    """Rebuild a ``Target`` from ``target_to_dict`` output against the
+    current device inventory.  Raises ``TuneCacheError`` when the entry
+    needs more devices than exist."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.api import Target
+    from repro.core.passes.decompose import SlicingStrategy
+
+    mesh = None
+    if d.get("mesh"):
+        shape = tuple(int(x) for x in d["mesh"]["shape"])
+        n = int(np.prod(shape))
+        devs = list(devices) if devices is not None else jax.devices()
+        if n > len(devs):
+            raise TuneCacheError(
+                f"cached mesh needs {n} devices, have {len(devs)}"
+            )
+        mesh = Mesh(
+            np.array(devs[:n]).reshape(shape), tuple(d["mesh"]["axes"])
+        )
+    strategy = None
+    if d.get("strategy"):
+        s = d["strategy"]
+        strategy = SlicingStrategy(
+            tuple(int(g) for g in s["grid"]),
+            tuple(s["axes"]),
+            tuple(int(x) for x in s["dims"]),
+        )
+    tile = d.get("pallas_tile")
+    return Target(
+        mesh=mesh,
+        strategy=strategy,
+        backend=d["backend"],
+        pipeline=d.get("pipeline"),
+        fuse=bool(d.get("fuse", True)),
+        cse=bool(d.get("cse", True)),
+        overlap=bool(d.get("overlap", False)),
+        diagonal=bool(d.get("diagonal", False)),
+        exchange_every=int(d.get("exchange_every", 1)),
+        pallas_interpret=bool(d.get("pallas_interpret", True)),
+        pallas_tile=tuple(tile) if tile else None,
+        donate=bool(d.get("donate", False)),
+        jit=bool(d.get("jit", True)),
+    )
+
+
+# --------------------------------------------------------------------------
+# load / store
+# --------------------------------------------------------------------------
+
+
+def load(key: str) -> Optional[dict]:
+    """The entry for ``key``, or ``None`` (counted as a miss).  Corrupt
+    files and schema mismatches are misses, never errors."""
+    path = entry_path(key)
+    try:
+        with open(path) as f:
+            entry = json.load(f)
+    except (OSError, ValueError):
+        _STATS.misses += 1
+        return None
+    if not isinstance(entry, dict) or entry.get("schema") != SCHEMA_VERSION:
+        _STATS.misses += 1
+        return None
+    _STATS.hits += 1
+    return entry
+
+
+def demote_hit_to_miss() -> None:
+    """An entry that *loaded* but failed semantic validation (device
+    inventory drift, stale strategy, program mismatch) is a miss, not a
+    hit — callers that reject a loaded entry call this so the counters
+    report what actually happened: the search ran."""
+    _STATS.hits -= 1
+    _STATS.misses += 1
+
+
+def store(key: str, entry: dict) -> str:
+    """Atomically write ``entry`` (tmp file + rename) and return its
+    path.  The schema version and key are stamped in."""
+    entry = dict(entry)
+    entry["schema"] = SCHEMA_VERSION
+    entry["key"] = key
+    entry.setdefault("created", time.strftime("%Y-%m-%dT%H:%M:%S"))
+    d = cache_dir()
+    os.makedirs(d, exist_ok=True)
+    path = entry_path(key)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(entry, f, indent=1)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):  # pragma: no cover - rename failed
+            os.unlink(tmp)
+    _STATS.stores += 1
+    return path

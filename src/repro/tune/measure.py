@@ -1,0 +1,94 @@
+"""On-device measurement harness for candidate ``Target``s.
+
+Protocol (DESIGN.md §8): jit the candidate's ``time_loop`` over a
+fixed-seed random state, run ``warmup`` untimed epochs' worth of steps,
+then ``trials`` timed runs blocked until ready, and report the *median*
+per-step seconds.  The step count is rounded up to a multiple of the
+candidate's ``exchange_every`` (a partial epoch has no compiled form),
+and the per-step normalization uses the rounded count, so depth-k
+candidates are compared per step, not per call.
+
+Distributed-awareness: on a multi-*process* runtime the wall clocks of
+different hosts disagree, so ``agree_on_times`` broadcasts process 0's
+timing vector to every process before the argmin — all ranks then select
+the identical winner.  In a single process (shard_map over local
+devices, the test harness) the vector is already shared.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+def measurement_state(compiled, dtype=None, seed: int = 0) -> tuple:
+    """Fixed-seed random *input* state for ``compiled.time_loop`` (output
+    buffers are allocated inside ``CompiledStencil.step``)."""
+    import jax.numpy as jnp
+
+    dtype = dtype or jnp.float32
+    rng = np.random.default_rng(seed)
+    outs = set(
+        compiled.program.field_args.index(f)
+        for f in compiled.program.output_fields
+    )
+    state = []
+    for i, f in enumerate(compiled.program.field_args):
+        if i in outs:
+            continue
+        shape = f.type.bounds.shape
+        state.append(jnp.asarray(rng.standard_normal(shape), dtype))
+    return tuple(state)
+
+
+def measure_compiled(
+    compiled,
+    steps: int = 8,
+    trials: int = 3,
+    warmup: int = 1,
+    dtype=None,
+    seed: int = 0,
+) -> float:
+    """Median wall-clock seconds *per time step* of ``compiled`` over
+    ``steps`` steps (rounded up to a whole number of epochs)."""
+    import jax
+
+    k = compiled.target.exchange_every
+    steps = max(int(steps), k)
+    steps = ((steps + k - 1) // k) * k
+    state = measurement_state(compiled, dtype=dtype, seed=seed)
+
+    loop = jax.jit(lambda *s: compiled.time_loop(s, steps))
+    out = None
+    for _ in range(max(int(warmup), 1)):
+        out = loop(*state)
+    jax.block_until_ready(out)
+    import time
+
+    times = []
+    for _ in range(max(int(trials), 1)):
+        t0 = time.perf_counter()
+        out = loop(*state)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) / steps
+
+
+def agree_on_times(times: Sequence[Optional[float]]) -> list:
+    """One timing vector every process agrees on: process 0's
+    measurements, broadcast.  ``None`` slots (unmeasured candidates) are
+    carried through.  A single-process runtime returns the input."""
+    import jax
+
+    if jax.process_count() <= 1:
+        return list(times)
+    try:  # pragma: no cover - requires a multi-process runtime
+        from jax.experimental import multihost_utils
+
+        arr = np.array(
+            [np.nan if t is None else float(t) for t in times], np.float64
+        )
+        arr = np.asarray(multihost_utils.broadcast_one_to_all(arr))
+        return [None if np.isnan(t) else float(t) for t in arr]
+    except Exception:
+        return list(times)

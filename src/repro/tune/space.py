@@ -1,0 +1,297 @@
+"""Search-space enumeration: ``Program`` + device inventory → candidate
+``Target``s.
+
+The space is the cross product of every knob the compile surface
+exposes, filtered down to configurations that can actually compile:
+
+- **mesh factorizations** of the rank count over the program's array
+  dims (8 ranks, rank-2 program → 8×1 slabs on dim 0 or 1, 4×2, 2×4,
+  2×2×2 is dropped — more mesh dims than array dims), keeping only
+  grids that divide every field extent;
+- **overlap** on/off (IR-level comm/compute overlap, PR 2);
+- **exchange_every** ∈ ``ks`` filtered by
+  ``RooflineTerms.feasible_exchange_every`` on the program's per-step
+  halo and shard extents (deep halo must fit the neighbour's core);
+- **backend** jnp/pallas, with ``pallas_tile`` candidates derived from
+  the local shard shape (whole-shard and split-leading-dim tiles that
+  divide it).
+
+Every candidate is validated through ``api._validate_for_program`` —
+what comes out of ``enumerate_candidates`` either compiles or was never
+offered.  The baseline ``Target.auto(ranks)`` configuration is always
+candidate #0 and is never pruned, so a tuned result can be compared
+against the default it replaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional, Sequence
+
+AXIS_NAMES = ("x", "y", "z", "w")
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One point of the search space, with its scores as they accrue:
+    ``modeled_s`` from the roofline stage, ``measured_s`` from the
+    on-device stage (``None`` when pruned before measurement)."""
+
+    target: object  # repro.api.Target
+    origin: str = "enumerated"  # "baseline" | "enumerated" | "cached"
+    modeled_s: Optional[float] = None
+    measured_s: Optional[float] = None
+    pruned: bool = False
+    note: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        return self.target.fingerprint
+
+    def describe(self) -> str:
+        t = self.target
+        if t.strategy is not None and any(g > 1 for g in t.strategy.grid_shape):
+            grid = "x".join(
+                f"{g}@d{d}"
+                for g, d in zip(t.strategy.grid_shape, t.strategy.dims)
+                if g > 1
+            )
+        else:
+            grid = "1"
+        parts = [f"grid={grid}", f"backend={t.backend}", f"k={t.exchange_every}"]
+        if t.overlap:
+            parts.append("overlap")
+        if t.pallas_tile:
+            parts.append("tile=" + "x".join(str(x) for x in t.pallas_tile))
+        return " ".join(parts)
+
+    def as_dict(self) -> dict:
+        return {
+            "describe": self.describe(),
+            "fingerprint": self.fingerprint,
+            "origin": self.origin,
+            "modeled_s": self.modeled_s,
+            "measured_s": self.measured_s,
+            "pruned": self.pruned,
+            "note": self.note,
+        }
+
+
+# --------------------------------------------------------------------------
+# mesh factorizations
+# --------------------------------------------------------------------------
+
+
+def factorizations(n: int) -> list:
+    """Ordered tuples of factors ≥ 2 with product ``n`` (``8 → (8,),
+    (2,4), (4,2), (2,2,2)``); ``(())`` for n=1."""
+    if n <= 1:
+        return [()]
+    out: list[tuple] = []
+
+    def rec(rem: int, cur: list) -> None:
+        if rem == 1:
+            out.append(tuple(cur))
+            return
+        for f in range(2, rem + 1):
+            if rem % f == 0:
+                rec(rem // f, cur + [f])
+
+    rec(n, [])
+    return out
+
+
+def mesh_assignments(n_ranks: int, rank: int) -> list:
+    """Every way to decompose ``n_ranks`` over a rank-``rank`` program:
+    tuples of (grid size, array dim), deduplicated (a 2×2 grid on dims
+    (0,1) equals the same grid on dims (1,0))."""
+    seen = set()
+    out = []
+    for factors in factorizations(n_ranks):
+        if len(factors) > rank:
+            continue
+        for dims in itertools.permutations(range(rank), len(factors)):
+            key = frozenset(zip(factors, dims))
+            if len(key) != len(factors) or key in seen:
+                continue
+            seen.add(key)
+            out.append(tuple(sorted(zip(factors, dims), key=lambda fd: fd[1])))
+    return out
+
+
+def strategy_candidates(program, n_ranks: int) -> list:
+    """``SlicingStrategy`` per feasible mesh assignment (every field
+    extent divisible by its dim's grid size); ``[None]`` at 1 rank."""
+    from repro.core.passes.decompose import SlicingStrategy
+
+    if n_ranks <= 1:
+        return [None]
+    out = []
+    for assignment in mesh_assignments(n_ranks, program.rank):
+        if not assignment:
+            continue
+        ok = True
+        for g, d in assignment:
+            for f in program.field_args:
+                if f.type.bounds.shape[d] % g != 0:
+                    ok = False
+        if not ok:
+            continue
+        grid = tuple(g for g, _ in assignment)
+        dims = tuple(d for _, d in assignment)
+        axes = tuple(AXIS_NAMES[i] for i in range(len(grid)))
+        out.append(SlicingStrategy(grid, axes, dims))
+    return out
+
+
+def mesh_for_strategy(strategy, devices):
+    """A JAX mesh matching ``strategy``'s grid over ``devices``."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    if strategy is None:
+        return None
+    n = int(np.prod(strategy.grid_shape))
+    return Mesh(
+        np.array(list(devices)[:n]).reshape(strategy.grid_shape),
+        strategy.axis_names,
+    )
+
+
+# --------------------------------------------------------------------------
+# per-strategy knob candidates
+# --------------------------------------------------------------------------
+
+
+def exchange_every_candidates(
+    program, strategy, ks: Sequence[int] = (1, 2, 4, 8)
+) -> list:
+    """Epoch depths from ``ks`` that are feasible for this program +
+    decomposition, via ``RooflineTerms.feasible_exchange_every`` on the
+    per-step halo and shard extents; non-epochable programs (e.g.
+    time_order=2 state that does not rotate closed) keep only k=1."""
+    from repro.core.passes.temporal import TemporalTilingError, epoch_halo
+    from repro.launch.roofline import RooflineTerms
+
+    ks = sorted(set(int(k) for k in ks))
+    if not program.field_args:
+        return [k for k in ks if k == 1]
+    try:
+        lo1, hi1 = epoch_halo(program.func, 1)
+    except TemporalTilingError:
+        return [k for k in ks if k == 1] or [1]
+    step_halo = tuple(max(l, h) for l, h in zip(lo1, hi1))
+    local_shape = _local_shape(program, strategy)
+    probe = RooflineTerms(
+        flops=0.0,
+        bytes_accessed=0.0,
+        step_halo=step_halo,
+        local_shape=local_shape,
+    )
+    out = [k for k in ks if k == 1 or probe.feasible_exchange_every(k)]
+    return out or [1]
+
+
+def pallas_tile_candidates(program, strategy) -> list:
+    """Tiles derived from the local shard shape: ``None`` (auto), the
+    whole shard, and the shard with its leading extent halved — each
+    kept only when it divides the shard."""
+    local = _local_shape(program, strategy)
+    out: list = [None]
+    if not local or any(n <= 0 for n in local):
+        return out
+    out.append(tuple(local))
+    if local[0] % 2 == 0 and local[0] >= 16:
+        out.append((local[0] // 2,) + tuple(local[1:]))
+    # dedupe, preserve order
+    seen: set = set()
+    uniq = []
+    for t in out:
+        if t not in seen:
+            seen.add(t)
+            uniq.append(t)
+    return uniq
+
+
+def _local_shape(program, strategy) -> tuple:
+    if not program.field_args:
+        return ()
+    bounds = program.field_args[0].type.bounds
+    if strategy is None:
+        return tuple(bounds.shape)
+    return tuple(strategy.local_bounds(bounds).shape)
+
+
+# --------------------------------------------------------------------------
+# the full space
+# --------------------------------------------------------------------------
+
+
+def enumerate_candidates(
+    program,
+    devices: Optional[Sequence] = None,
+    ranks: Optional[int] = None,
+    backends: Sequence[str] = ("jnp", "pallas"),
+    exchange_every: Sequence[int] = (1, 2, 4, 8),
+    overlap: Sequence[bool] = (False, True),
+    pallas_tiles: bool = True,
+) -> list:
+    """The candidate list for ``program`` on ``devices`` (default: all),
+    baseline first.  Simple configurations enumerate first (no overlap,
+    shallow epochs, jnp, no tile), so stable min-by-score tie-breaks
+    prefer the least exotic winner."""
+    import jax
+
+    from repro import api
+
+    devices = list(devices) if devices is not None else jax.devices()
+    n_ranks = len(devices) if ranks is None else int(ranks)
+    if n_ranks > len(devices):
+        raise api.TargetError(
+            f"requested {n_ranks} ranks, have {len(devices)} devices"
+        )
+    devices = devices[:n_ranks]
+
+    baseline = Candidate(
+        target=api.Target.auto(ranks=n_ranks), origin="baseline"
+    )
+    try:
+        api._validate_for_program(program, baseline.target)
+    except api.TargetError as e:
+        # e.g. extents not divisible by the device count 1-D: fall back
+        # to single-device as the reference configuration
+        baseline = Candidate(
+            target=api.Target(), origin="baseline", note=f"auto invalid: {e}"
+        )
+
+    seen = {baseline.fingerprint}
+    out = [baseline]
+    for strategy in strategy_candidates(program, n_ranks):
+        mesh = mesh_for_strategy(strategy, devices)
+        ks = exchange_every_candidates(program, strategy, exchange_every)
+        tiles = (
+            pallas_tile_candidates(program, strategy)
+            if pallas_tiles
+            else [None]
+        )
+        for ov in overlap:
+            for k in ks:
+                for backend in backends:
+                    for tile in tiles if backend == "pallas" else [None]:
+                        try:
+                            t = api.Target(
+                                mesh=mesh,
+                                strategy=strategy,
+                                backend=backend,
+                                overlap=bool(ov),
+                                exchange_every=k,
+                                pallas_tile=tile,
+                            )
+                            api._validate_for_program(program, t)
+                        except api.TargetError:
+                            continue
+                        if t.fingerprint in seen:
+                            continue
+                        seen.add(t.fingerprint)
+                        out.append(Candidate(target=t))
+    return out

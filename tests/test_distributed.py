@@ -38,6 +38,8 @@ SCENARIOS = [
     "ee2-box-overlap",
     "ee4-pallas",
     "ee-heat-epoch",
+    "tune-4rank",
+    "pallas-tile-shard-error",
 ]
 
 
