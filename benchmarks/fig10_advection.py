@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import gpts, save_record, table, time_step
+from benchmarks.common import gpts, save_record, table, target_record, time_step
 from repro.api import Program, Target, compile as api_compile
 from repro.core.dialects import stencil
 from repro.core.passes import cse_apply_bodies, dce, fuse_applies
@@ -51,7 +51,7 @@ def _count_applies(func) -> int:
     return sum(1 for op in func.body.ops if isinstance(op, stencil.ApplyOp))
 
 
-def run(fast: bool = False) -> dict:
+def run(fast: bool = False, tune: bool = False) -> dict:
     shape = (64, 64, 32) if fast else (128, 128, 64)
     rng = np.random.default_rng(0)
     record, rows = {}, []
@@ -68,19 +68,28 @@ def run(fast: bool = False) -> dict:
         n_fused = _count_applies(func)
 
         prog = Program(func, boundary="periodic")
-        step = api_compile(prog, Target())
+        if tune:
+            # cost-model-only search (cheap; cached on disk) — the timed
+            # call below measures the tuned choice; ranks=1 keeps tuned
+            # rows comparable with the manual single-device rows
+            target = Target.tuned(prog, ranks=1, measure=False)
+        else:
+            target = Target()
+        step = api_compile(prog, target)
         args = [
             jnp.asarray(rng.standard_normal(shape), jnp.float32)
             for _ in range(len(prog.field_args))
         ]
         sec = time_step(lambda *a: step(*a), args, iters=3, warmup=1)
-        tp = gpts(shape, sec)
+        # one call of a depth-k tuned artifact advances k time steps
+        tp = gpts(shape, sec, target.exchange_every)
         record[name] = {
             "shape": shape,
             "regions_raw": n_raw,
             "regions_fused": n_fused,
             "sec": sec,
             "gpts": tp,
+            "target": target_record(target, "tuned" if tune else "manual"),
         }
         rows.append((name, "x".join(map(str, shape)), n_raw, n_fused, f"{tp:.3f}"))
 

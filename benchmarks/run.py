@@ -6,6 +6,7 @@ fig7a/b  heat / acoustic-wave throughput sweeps (Devito-like frontend)
 fig8     strong-scaling model (halo bytes + roofline terms vs ranks)
 fig10    PW + tracer advection (PSyclone-like frontend, fusion counts)
 table1   backend comparison (jnp vs pallas; raw vs optimized pipeline)
+serve    mixed-traffic serving load test (repro.serve.stencil engine)
 """
 from __future__ import annotations
 
@@ -31,6 +32,7 @@ def main() -> int:
         fig7_wave,
         fig8_scaling,
         fig10_advection,
+        serve_load,
     )
 
     benches = {
@@ -39,6 +41,7 @@ def main() -> int:
         "fig8_scaling": fig8_scaling.run,
         "fig10_advection": fig10_advection.run,
         "backend_compare": backend_compare.run,
+        "serve_load": serve_load.run,
     }
     wanted = args.only.split(",") if args.only else list(benches)
     failures = 0

@@ -1,0 +1,201 @@
+"""Serving load test: mixed stencil traffic through one StencilEngine.
+
+The tentpole measurement for ``repro.serve.stencil``: many tenants'
+heat / wave / advection jobs — varied shapes, epoch depths and step
+counts, Poisson arrivals — stream through ONE engine, and we report what
+a serving operator cares about: aggregate sustained GPts/s across all
+tenants, request latency percentiles (p50/p99 wall-clock), batched-vs-
+solo dispatch mix, slot-pool utilization and compile-cache reuse.
+
+Acceptance (asserted here, not just reported): at least one engine step
+batches >= 2 same-fingerprint requests into one vmapped dispatch, and a
+spot-check request per traffic profile is bitwise-equal to a solo
+``compile(...).time_loop(...)`` run.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_record, table
+from repro import api
+from repro.api import Target
+from repro.frontends.oec_like import ProgramBuilder
+from repro.serve.stencil import StencilEngine, StencilEngineConfig
+
+
+def _heat(shape):
+    p = ProgramBuilder(f"heat{len(shape)}d", shape)
+    u = p.input("u")
+    out = p.output("out")
+    t = p.load(u)
+    r = p.apply(
+        [t],
+        lambda b, u: u.at(0, 0)
+        + 0.1
+        * (u.at(-1, 0) + u.at(1, 0) + u.at(0, -1) + u.at(0, 1) - 4.0 * u.at(0, 0)),
+    )
+    p.store(r, out)
+    return p.finish(boundary="periodic")
+
+
+def _wave(shape):
+    # p=2 inputs / q=1 output: exercises carried-state rotation under
+    # exchange_every=2 inside the batched slot pool
+    p = ProgramBuilder(f"wave{len(shape)}d", shape)
+    um = p.input("u_prev")
+    u0 = p.input("u_now")
+    out = p.output("u_next")
+    tm, t0 = p.load(um), p.load(u0)
+    r = p.apply(
+        [tm, t0],
+        lambda b, um, u0: 2.0 * u0.at(0, 0)
+        - um.at(0, 0)
+        + 0.1
+        * (
+            u0.at(-1, 0)
+            + u0.at(1, 0)
+            + u0.at(0, -1)
+            + u0.at(0, 1)
+            - 4.0 * u0.at(0, 0)
+        ),
+    )
+    p.store(r, out)
+    return p.finish(boundary="zero")
+
+
+def _advection(shape):
+    # first-order upwind transport, c=(0.4, 0.3)
+    p = ProgramBuilder(f"adv{len(shape)}d", shape)
+    u = p.input("u")
+    out = p.output("out")
+    t = p.load(u)
+    r = p.apply(
+        [t],
+        lambda b, u: u.at(0, 0)
+        - 0.4 * (u.at(0, 0) - u.at(-1, 0))
+        - 0.3 * (u.at(0, 0) - u.at(0, -1)),
+    )
+    p.store(r, out)
+    return p.finish(boundary="periodic")
+
+
+def _profiles(fast: bool):
+    """Mixed traffic: (name, program, target, n_inputs, steps choices).
+    Shapes differ across profiles, so each is its own fingerprint bucket."""
+    s, m = ((48, 48), (64, 64)) if fast else ((96, 96), (128, 128))
+    return [
+        ("heat_small", _heat(s), Target(), 1, (8, 12, 16)),
+        ("heat_large", _heat(m), Target(), 1, (8, 12)),
+        ("wave_k2", _wave(s), Target(exchange_every=2), 2, (8, 12, 16)),
+        ("advection", _advection(s), Target(), 1, (8, 16)),
+    ]
+
+
+def run(fast: bool = False) -> dict:
+    rng = np.random.default_rng(42)
+    profiles = _profiles(fast)
+    n_requests = 12 if fast else 48
+    arrival_rate = 2.0  # mean arrivals per engine step (Poisson process)
+
+    # Poisson arrivals: exponential inter-arrival gaps in engine-step
+    # units, cumulated to an arrival schedule
+    gaps = rng.exponential(1.0 / arrival_rate, size=n_requests)
+    arrive_at = np.cumsum(gaps)
+
+    plan = []
+    for i in range(n_requests):
+        name, prog, target, n_in, steps_menu = profiles[
+            rng.integers(len(profiles))
+        ]
+        shape = prog.field_args[0].type.bounds.shape
+        state = tuple(
+            rng.standard_normal(shape).astype(np.float32) for _ in range(n_in)
+        )
+        plan.append(
+            (arrive_at[i], name, prog, target, state, int(rng.choice(steps_menu)))
+        )
+
+    eng = StencilEngine(StencilEngineConfig(slots_per_group=4))
+    handles = []  # (profile name, handle, state, n_steps)
+
+    import time
+
+    t0 = time.perf_counter()
+    next_req = 0
+    # drive the engine in virtual time: engine step s admits every
+    # request whose Poisson arrival time has passed
+    while next_req < len(plan) or eng.pending:
+        while (
+            next_req < len(plan)
+            and plan[next_req][0] <= eng.engine_step_count + 1
+        ):
+            _, name, prog, target, state, n_steps = plan[next_req]
+            h = eng.submit(prog, state, n_steps, target=target, tenant=name)
+            handles.append((name, h, state, n_steps))
+            next_req += 1
+        eng.step()
+    wall_s = time.perf_counter() - t0
+
+    # ---- acceptance: batching happened, results are bitwise-correct ----
+    peak_live_batched = max(
+        (m.live_slots for m in eng.metrics.history if m.batched_dispatches),
+        default=0,
+    )
+    assert eng.metrics.batched_dispatches >= 1, (
+        "no engine step coalesced >= 2 same-fingerprint requests into one "
+        "vmapped dispatch — the load pattern should force this"
+    )
+    checked = set()
+    for name, h, state, n_steps in handles:
+        if name in checked:
+            continue
+        checked.add(name)
+        prog, target = h._req.program, h._req.target
+        want = api.compile(prog, target).time_loop(state, n_steps)
+        got = h.result()
+        for w, o in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(o))
+
+    # ---- report --------------------------------------------------------
+    lat = np.array([h.latency_s for _, h, _, _ in handles])
+    points = sum(
+        float(np.prod(h._req.program.field_args[0].type.bounds.shape)) * n
+        for _, h, _, n in handles
+    )
+    snap = eng.metrics.snapshot()
+    record = {
+        "n_requests": n_requests,
+        "arrival_rate_per_step": arrival_rate,
+        "wall_s": wall_s,
+        "aggregate_gpts": points / wall_s / 1e9,
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "latency_mean_s": float(lat.mean()),
+        "peak_live_on_batched_step": peak_live_batched,
+        "profiles": {
+            name: sum(1 for n, *_ in handles if n == name)
+            for name, *_ in profiles
+        },
+        "engine": snap,
+    }
+    rows = [
+        ("requests", n_requests),
+        ("engine steps", snap["engine_steps"]),
+        ("aggregate GPts/s", f"{record['aggregate_gpts']:.4f}"),
+        ("latency p50 (ms)", f"{record['latency_p50_s'] * 1e3:.1f}"),
+        ("latency p99 (ms)", f"{record['latency_p99_s'] * 1e3:.1f}"),
+        ("batched dispatches", snap["batched_dispatches"]),
+        ("solo dispatches", snap["solo_dispatches"]),
+        ("peak live (batched step)", peak_live_batched),
+        ("mean utilization", f"{snap['mean_utilization']:.2f}"),
+        ("compile-cache hits", snap["compile_cache"]["hits"]),
+        ("compile-cache misses", snap["compile_cache"]["misses"]),
+    ]
+    print(table("serve_load: mixed stencil traffic (one engine)", rows,
+                ["metric", "value"]))
+    save_record("serve_load", record)
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -176,6 +176,53 @@ print(f"tune smoke OK: winner {r1.winner.describe()!r}, "
       f"stats={cache_stats().as_dict()}")
 EOF
 
+echo "== serve smoke =="
+python - <<'EOF'
+# two concurrent same-fingerprint requests plus one epoch-depth wave
+# request through one StencilEngine: the heat pair must coalesce into a
+# batched vmapped dispatch, and every result must be bitwise-equal to a
+# solo compile(...).time_loop(...) run
+import numpy as np
+
+from repro import api
+from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
+from repro.serve.stencil import StencilEngine, StencilEngineConfig
+
+grid = Grid(shape=(48, 48), extent=(1.0, 1.0))
+u = TimeFunction(name="u", grid=grid, space_order=2)
+dt = 0.8 * grid.spacing[0] ** 2 / (4 * 0.5)
+heat = Operator(Eq(u.dt, 0.5 * u.laplace), dt=dt, boundary="zero").program
+w = TimeFunction(name="w", grid=grid, space_order=2, time_order=2)
+wave = Operator(Eq(w.dt2, w.laplace), dt=1e-3, boundary="zero").program
+
+rng = np.random.default_rng(0)
+t_heat, t_wave = api.Target(), api.Target(exchange_every=2)
+eng = StencilEngine(StencilEngineConfig(slots_per_group=2))
+jobs = []
+for i in range(2):  # same fingerprint → one vmapped dispatch
+    s = (rng.standard_normal((48, 48)).astype(np.float32),)
+    jobs.append((eng.submit(heat, s, 4, tenant=f"heat{i}"), heat, t_heat, s, 4))
+s = tuple(rng.standard_normal((48, 48)).astype(np.float32) for _ in range(2))
+jobs.append((eng.submit(wave, s, 4, target=t_wave, tenant="wave"),
+             wave, t_wave, s, 4))
+eng.run()
+
+snap = eng.metrics.snapshot()
+assert snap["batched_dispatches"] >= 1, (
+    f"heat pair did not coalesce: {snap}"
+)
+assert snap["requests_completed"] == 3, snap
+for h, prog, target, state, n in jobs:
+    want = api.compile(prog, target).time_loop(state, n)
+    for a, b in zip(h.result(), want):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            f"serve result differs from solo run for rid={h.rid}"
+        )
+print(f"serve smoke OK: {snap['batched_dispatches']} batched / "
+      f"{snap['solo_dispatches']} solo dispatches over "
+      f"{snap['engine_steps']} engine steps, all results bitwise-equal")
+EOF
+
 if [[ "${1:-}" == "--smoke" ]]; then
   echo "smoke only: skipping tier-1 tests"
   exit 0

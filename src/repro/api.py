@@ -36,7 +36,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 import threading
+from collections import OrderedDict
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -369,6 +371,7 @@ class CompiledStencil:
         partition_specs: tuple,
         donate_argnums: tuple,
         raw_fn: Callable,
+        ret_indices: Optional[tuple] = None,
     ) -> None:
         self.program = program
         self.target = target
@@ -379,13 +382,31 @@ class CompiledStencil:
         self.donate_argnums = donate_argnums
         self._fn = fn
         self._raw_fn = raw_fn  # pre-jit (shard_map'd) callable, for .lower()
+        # buffers step() allocates internally: the program's stored fields
         self._out_indices = tuple(
             program.field_args.index(f) for f in program.output_fields
+        )
+        # field-arg positions of the values a call RETURNS (first-store
+        # order of the local IR) — equals _out_indices except for epoched
+        # carried-state programs (wave, p > q), whose epochs also hand
+        # back the rotated-through intermediate buffers
+        self._ret_indices = (
+            ret_indices if ret_indices is not None else self._out_indices
         )
 
     # -- execution -------------------------------------------------------
     def __call__(self, *arrays):
         return self._fn(*arrays)
+
+    @property
+    def input_indices(self) -> tuple:
+        """Field-arg positions ``step()`` consumes (the time-loop state,
+        oldest → newest); the complement of the internally-allocated
+        output buffers."""
+        outs = set(self._out_indices)
+        return tuple(
+            i for i in range(len(self.program.field_args)) if i not in outs
+        )
 
     def step(self, dtype=None) -> Callable:
         """A step over the *input* fields only: output buffers (fully
@@ -503,12 +524,26 @@ class CompiledStencil:
 class CacheStats:
     hits: int = 0
     misses: int = 0
+    evictions: int = 0
 
     def as_dict(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses}
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }
 
 
-_CACHE: dict[tuple, Any] = {}
+# LRU-bounded: a long-lived serving process compiles an open-ended stream
+# of (program, target) pairs; without a bound the process-wide cache —
+# and every XLA executable it pins — grows monotonically.  Capacity is
+# generous (sweeps and the serve engine fit comfortably); override with
+# REPRO_COMPILE_CACHE_CAP or set_cache_capacity().
+_DEFAULT_CAPACITY = 256
+_CACHE: "OrderedDict[tuple, Any]" = OrderedDict()
+_CAPACITY = max(
+    1, int(os.environ.get("REPRO_COMPILE_CACHE_CAP", _DEFAULT_CAPACITY))
+)
 _STATS = CacheStats()
 # Global lock guards the dicts only (held briefly); builds run under a
 # per-key lock, so concurrent compiles of the SAME key return the same
@@ -520,8 +555,35 @@ _KEY_LOCKS: dict[tuple, threading.Lock] = {}
 
 def cache_stats() -> CacheStats:
     """Process-wide compile-cache counters (shared by ``compile``,
-    ``lower_ir`` and ``cached_callable``)."""
+    ``lower_ir`` and ``cached_callable``) — truthful hit/miss/eviction
+    counts of the LRU-bounded cache."""
     return _STATS
+
+
+def cache_capacity() -> int:
+    return _CAPACITY
+
+
+def set_cache_capacity(n: int) -> int:
+    """Bound the process-wide compile cache to ``n`` entries (LRU
+    eviction; evicting frees the artifact for GC).  Returns the previous
+    capacity.  ``n`` must be >= 1 — a serving process needs at least the
+    artifact it is currently dispatching."""
+    global _CAPACITY
+    if int(n) < 1:
+        raise ValueError(f"cache capacity must be >= 1, got {n!r}")
+    with _LOCK:
+        prev, _CAPACITY = _CAPACITY, int(n)
+        _evict_over_capacity()
+    return prev
+
+
+def _evict_over_capacity() -> None:
+    # caller holds _LOCK
+    while len(_CACHE) > _CAPACITY:
+        key, _ = _CACHE.popitem(last=False)
+        _KEY_LOCKS.pop(key, None)
+        _STATS.evictions += 1
 
 
 def clear_cache() -> None:
@@ -530,23 +592,27 @@ def clear_cache() -> None:
         _KEY_LOCKS.clear()
         _STATS.hits = 0
         _STATS.misses = 0
+        _STATS.evictions = 0
 
 
 def _cached(key: tuple, build: Callable[[], Any]) -> Any:
     with _LOCK:
         if key in _CACHE:
             _STATS.hits += 1
+            _CACHE.move_to_end(key)  # LRU freshness
             return _CACHE[key]
         key_lock = _KEY_LOCKS.setdefault(key, threading.Lock())
     with key_lock:
         with _LOCK:
             if key in _CACHE:  # built by the thread we waited on
                 _STATS.hits += 1
+                _CACHE.move_to_end(key)
                 return _CACHE[key]
         out = build()
         with _LOCK:
             _STATS.misses += 1
             _CACHE[key] = out
+            _evict_over_capacity()
         return out
 
 
@@ -744,12 +810,19 @@ def _build(program: Program, target: Target) -> CompiledStencil:
         pallas_tile=target.pallas_tile,
     )
     specs = partition_specs(program, strategy)
-    out_fields = program.output_fields
-    out_indices = tuple(program.field_args.index(f) for f in out_fields)
+    # return arity/order comes from the LOCAL IR (first-store order):
+    # an epoched carried-state program (wave, p > q) stores — and returns
+    # — more buffers per call than the single-step program does
+    local_fields = [
+        a for a in local.body.args if isinstance(a.type, stencil.FieldType)
+    ]
+    ret_indices = tuple(
+        local_fields.index(f) for f in _stored_fields(local)
+    )
 
     raw: Callable = interp
     if distributed:
-        out_specs = tuple(specs[i] for i in out_indices)
+        out_specs = tuple(specs[i] for i in ret_indices)
         from repro.dist.sharding import shard_map  # version-portable
 
         raw = shard_map(
@@ -780,6 +853,7 @@ def _build(program: Program, target: Target) -> CompiledStencil:
         partition_specs=tuple(specs),
         donate_argnums=donate,
         raw_fn=raw,
+        ret_indices=ret_indices,
     )
 
 

@@ -21,6 +21,12 @@ before ``overlap``/``lower-comm``):
   the *remaining* steps still read — step j computes ``core`` plus a
   shrinking frame of redundant boundary points, step k computes exactly
   ``core``;
+- programs whose state carries *more* inputs than outputs (``p > q``,
+  e.g. ``time_order >= 2`` wave kernels reading ``u`` and ``u_prev``)
+  rotate closed too: the epoch stores the ``p - q`` carried intermediate
+  buffers (iterations ``k-q`` … ``k-1``) into the dead oldest input
+  buffers and returns the FULL rotated state oldest → newest, so the
+  caller's ``state' = state[len(outs):] + outs`` is exact for any depth;
 - for ``zero`` (dirichlet) boundaries a ``comm.boundary_mask`` re-applies
   the boundary condition to redundantly-computed points that lie outside
   the *physical* domain (rank-position-aware, no communication), so the
@@ -49,8 +55,8 @@ from repro.core.passes.halo import needs_corners
 
 class TemporalTilingError(ValueError):
     """A program shape ``temporal_tile`` cannot epoch: state that does not
-    rotate closed (inputs != outputs), partial stores, index-dependent
-    bodies, or unsupported function-level ops."""
+    rotate closed (more outputs than inputs), partial stores,
+    index-dependent bodies, or unsupported function-level ops."""
 
 
 # --------------------------------------------------------------------------
@@ -135,12 +141,12 @@ def _extract_step(func: ir.FuncOp) -> _Step:
         stored_val[st_op.field] = _unswapped(st_op.temp, swaps)
         out_fields.append(st_op.field)
     in_fields = [a for a in field_args if a not in stored_val]
-    if len(in_fields) != len(out_fields):
+    if len(out_fields) > len(in_fields) or not out_fields:
         raise TemporalTilingError(
             f"state does not rotate closed: {len(in_fields)} input field(s) "
-            f"vs {len(out_fields)} output field(s); temporal tiling needs one "
-            "output buffer per input (e.g. time_order >= 2 wave programs "
-            "carry state across epochs that a single epoch call cannot return)"
+            f"vs {len(out_fields)} output field(s); temporal tiling needs at "
+            "least one input buffer per output so the rotation "
+            "state' = state[q:] + outs is well-defined"
         )
     for f in in_fields:
         if f not in load_of_field:
@@ -153,13 +159,17 @@ def _extract_step(func: ir.FuncOp) -> _Step:
                 f"field {f.name_hint!r} is both loaded and stored "
                 "(read-modify-write steps cannot be epoch-unrolled)"
             )
+    # output i rotates into input slot p-q+i (the rotation drops the q
+    # oldest buffers): bounds must line up slot-wise, including for
+    # time_order >= 2 wave programs where p > q
+    shift = len(in_fields) - len(out_fields)
     for i, f in enumerate(out_fields):
-        want = load_of_field[in_fields[i]].type.bounds
+        want = load_of_field[in_fields[shift + i]].type.bounds
         have = stored_val[f].type.bounds
         if want != have:
             raise TemporalTilingError(
                 f"stored value bounds {have} cannot rotate into input slot "
-                f"{i} with bounds {want}"
+                f"{shift + i} with bounds {want}"
             )
     return _Step(
         loads=loads,
@@ -198,7 +208,7 @@ class _Plan:
         if j == 1:
             return (0, v)
         p, q = len(s.in_fields), len(s.out_fields)
-        if slot < p - q:  # unreachable while p == q is enforced; kept general
+        if slot < p - q:  # carried state (p > q, e.g. wave): rotate through
             return self.producer(j - 1, s.load_of_field[s.in_fields[slot + q]])
         return (j - 1, s.stored_val[s.out_fields[slot - (p - q)]])
 
@@ -382,6 +392,20 @@ def temporal_tile(func: ir.FuncOp, k: int) -> ir.FuncOp:
                     val = mask.results[0]
                 emitted[(j, r)] = val
 
+    # carried state (p > q, e.g. time_order-2 wave): a k-step epoch must
+    # hand back the FULL rotated state, not just iteration k's outputs —
+    # the caller's rotation state' = state[len(outs):] + outs then yields
+    # (u_{t+k-1}, u_{t+k}) instead of the stale (u_t, u_{t+k}).  The p-q
+    # intermediate values are stored into the (dead after the epoch)
+    # oldest input buffers, *before* the original stores so first-store
+    # order stays oldest → newest.
+    p_in, q_out = len(step.in_fields), len(step.out_fields)
+    for i in range(p_in - q_out):
+        v = emitted[
+            plan.producer(k + 1, step.load_of_field[step.in_fields[i]])
+        ]
+        carry_field = vmap[step.in_fields[i]]
+        block.add_op(stencil.StoreOp(v, carry_field, carry_field.type.bounds))
     for st_op in step.stores:
         v = emitted[plan.producer(k, _unswapped(st_op.temp, step.swaps))]
         block.add_op(stencil.StoreOp(v, vmap[st_op.field], st_op.bounds))

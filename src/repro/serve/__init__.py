@@ -1,1 +1,8 @@
 from repro.serve.engine import Engine, EngineConfig, Request  # noqa: F401
+from repro.serve.stencil import (  # noqa: F401
+    Frame,
+    RequestHandle,
+    StencilEngine,
+    StencilEngineConfig,
+    StencilRequest,
+)

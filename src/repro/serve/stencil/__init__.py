@@ -1,0 +1,19 @@
+"""Multi-tenant stencil-simulation serving (fingerprint-batched slot pools).
+
+See ``engine.py`` for the execution model and DESIGN.md §9 for the
+design rationale.
+"""
+from repro.serve.stencil.engine import (  # noqa: F401
+    StencilEngine,
+    StencilEngineConfig,
+)
+from repro.serve.stencil.metrics import EngineMetrics, StepMetrics  # noqa: F401
+from repro.serve.stencil.request import (  # noqa: F401
+    DONE,
+    QUEUED,
+    RUNNING,
+    Frame,
+    RequestHandle,
+    StencilRequest,
+)
+from repro.serve.stencil.scheduler import Scheduler, SlotPool  # noqa: F401

@@ -1,0 +1,261 @@
+"""Multi-tenant stencil-simulation serving engine.
+
+The ROADMAP's "millions of users" direction: many tenants submit
+``(Program, initial state, n_steps, Target)`` jobs against ONE running
+service, and throughput under concurrent mixed traffic — not single-run
+latency — is the figure of merit.  The design generalizes the vLLM-style
+slot pool of ``serve/engine.py`` onto the PR 3 compile surface:
+
+- **fingerprint batching** — live requests are grouped by
+  ``(program.fingerprint, target.fingerprint)``; each group's engine step
+  is ONE vmapped ``CompiledStencil`` call over a fixed slot pool, so the
+  executable is shape-stable per bucket and compiled exactly once
+  (``repro.api``'s process-wide cache, now LRU-bounded, keys it);
+- **continuous admission** — requests finish at different ``n_steps``;
+  a finished slot is reclaimed and refilled from the bucket's FIFO queue
+  within the same engine step, so short jobs never wait on long ones;
+- **epoch-aligned stepping** — a ``Target(exchange_every=k)`` bucket
+  advances every live slot by one *epoch* (k time steps) per dispatch;
+  ``n_steps`` must be a multiple of k (validated at submit), so deep-halo
+  temporal tiling stays bitwise-correct inside the batch;
+- **streaming frames** — each request can stream intermediate state back
+  at a ``frame_every`` cadence via callback or pull iterator
+  (``request.py``), snapshots taken at epoch boundaries;
+- **metrics** — per-step utilization (live/pool), batched-vs-solo
+  dispatch counts, compile-cache hit deltas and per-fingerprint queue
+  depth (``metrics.py``).
+
+Distributed targets (``target.distributed``) are served too, but solo:
+one ``shard_map``-ed call per live slot (vmapping over a mesh-spanning
+program would nest batching inside the collective); they are counted as
+solo dispatches, which the metrics make visible.
+
+Every request's final state is **bitwise-equal** to a solo
+``compile(program, target).time_loop(state, n_steps)`` run — the batched
+dispatch vmaps the very same compiled step, and stencil arithmetic is
+slot-local, so XLA executes identical per-slot op sequences.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+
+from repro import api
+from repro.serve.stencil.metrics import EngineMetrics, StepMetrics
+from repro.serve.stencil.request import (
+    DONE,
+    Frame,  # noqa: F401  (re-export for tenants)
+    RequestHandle,
+    StencilRequest,
+    now,
+)
+from repro.serve.stencil.scheduler import Scheduler, SlotPool
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilEngineConfig:
+    """Engine knobs.
+
+    ``slots_per_group`` is the fixed pool size per fingerprint bucket —
+    the batch width of the vmapped dispatch.  ``history_limit`` bounds
+    the retained per-step metrics rows.
+    """
+
+    slots_per_group: int = 4
+    history_limit: int = 10_000
+
+    def __post_init__(self) -> None:
+        if self.slots_per_group < 1:
+            raise ValueError(
+                f"slots_per_group must be >= 1, got {self.slots_per_group}"
+            )
+
+
+class StencilEngine:
+    """Admit stencil jobs from many tenants; advance them in
+    fingerprint-batched, epoch-aligned engine steps."""
+
+    def __init__(self, config: Optional[StencilEngineConfig] = None) -> None:
+        self.config = config or StencilEngineConfig()
+        self.scheduler = Scheduler(self.config.slots_per_group)
+        self.metrics = EngineMetrics(self.config.history_limit)
+        self.finished: list[StencilRequest] = []
+        self.engine_step_count = 0
+        self._next_rid = 0
+
+    # -- public API ------------------------------------------------------
+    def submit(
+        self,
+        program,
+        state: Sequence[Any],
+        n_steps: int,
+        target=None,
+        *,
+        frame_every: int = 0,
+        on_frame: Optional[Callable] = None,
+        tenant: Optional[str] = None,
+    ) -> RequestHandle:
+        """Enqueue one simulation job; returns a handle immediately.
+
+        ``state`` is the input buffers oldest → newest (exactly what
+        ``CompiledStencil.time_loop`` takes).  ``n_steps`` counts single
+        time steps and must be a positive multiple of the target's
+        ``exchange_every`` (one engine dispatch advances a whole epoch).
+        ``frame_every`` > 0 streams a state snapshot at each epoch
+        boundary crossing a multiple of that cadence.
+        """
+        target = target if target is not None else api.Target()
+        compiled = api.compile(program, target)  # cache-keyed by fingerprints
+        k = target.exchange_every
+        if n_steps < 1:
+            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        if n_steps % k != 0:
+            raise ValueError(
+                f"n_steps={n_steps} is not a multiple of the target's "
+                f"exchange_every={k}; the engine advances whole epochs, so "
+                "round the request up or pick a dividing epoch depth"
+            )
+        if frame_every < 0:
+            raise ValueError(f"frame_every must be >= 0, got {frame_every}")
+        inputs = compiled.input_indices
+        if len(state) != len(inputs):
+            raise ValueError(
+                f"program {program.name!r} takes {len(inputs)} input "
+                f"buffer(s) (oldest → newest), got {len(state)}"
+            )
+        for arr, idx in zip(state, inputs):
+            want = tuple(program.field_args[idx].type.bounds.shape)
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"input buffer for field "
+                    f"{program.field_names[idx]!r} has shape "
+                    f"{tuple(arr.shape)}, expected {want}"
+                )
+        req = StencilRequest(
+            rid=self._next_rid,
+            program=program,
+            target=target,
+            state=tuple(state),
+            n_steps=int(n_steps),
+            frame_every=int(frame_every),
+            on_frame=on_frame,
+            tenant=tenant,
+            submitted_at=now(),
+        )
+        self._next_rid += 1
+        group = self.scheduler.group_for(compiled)
+        self.scheduler.enqueue(group, req)
+        self.metrics.requests_submitted += 1
+        return RequestHandle(req)
+
+    def step(self) -> StepMetrics:
+        """One engine step: admit, dispatch every non-empty bucket once,
+        stream frames, reclaim + refill finished slots."""
+        self.engine_step_count += 1
+        batched = solo = steps_advanced = 0
+        live_at_dispatch = 0
+        for group in list(self.scheduler.groups.values()):
+            self.scheduler.admit(group)
+            live = sorted(group.active.items())
+            live_at_dispatch += len(live)
+            if not live:
+                continue
+            if group.compiled.target.distributed:
+                for slot, _ in live:
+                    outs = group.compiled.step()(*group.read_slot(slot))
+                    outs = outs if isinstance(outs, tuple) else (outs,)
+                    group.rotate_slot(slot, outs)
+                    solo += 1
+            else:
+                outs = self._pool_fn(group)(*group.state)
+                outs = outs if isinstance(outs, tuple) else (outs,)
+                group.rotate(outs)
+                if len(live) >= 2:
+                    batched += 1
+                else:
+                    solo += 1
+            k = group.exchange_every
+            for slot, req in live:
+                req.steps_done += k
+                steps_advanced += k
+                self._stream_frames(group, req)
+                if req.steps_done >= req.n_steps:
+                    self._finish(group, req)
+            # continuous admission: refill slots freed this very step so
+            # the next dispatch runs at full width
+            self.scheduler.admit(group)
+        metrics = StepMetrics(
+            engine_step=self.engine_step_count,
+            live_slots=live_at_dispatch,
+            pool_slots=self.scheduler.total_slots,
+            queued=self.scheduler.total_queued,
+            batched_dispatches=batched,
+            solo_dispatches=solo,
+            steps_advanced=steps_advanced,
+            queue_depth=self.scheduler.queue_depths(),
+        )
+        self.metrics.record_step(metrics)
+        return metrics
+
+    def run(self, max_engine_steps: int = 100_000) -> list:
+        """Drive the engine until every submitted request finished (or the
+        step budget runs out); returns the finished requests."""
+        for _ in range(max_engine_steps):
+            if not self.pending:
+                break
+            self.step()
+        return self.finished
+
+    @property
+    def pending(self) -> int:
+        """Requests admitted or queued but not yet finished."""
+        return self.scheduler.total_live + self.scheduler.total_queued
+
+    @property
+    def utilization(self) -> float:
+        return self.scheduler.total_live / max(1, self.scheduler.total_slots)
+
+    # -- internals -------------------------------------------------------
+    def _pool_fn(self, group: SlotPool) -> Callable:
+        """The bucket's shape-stable pool executable: ONE jitted vmap of
+        the compiled step over the slot axis, cached process-wide on the
+        same fingerprints the compile cache uses — a second engine (or a
+        restarted one) over the same traffic re-traces nothing."""
+        compiled = group.compiled
+        key = (
+            "serve-stencil",
+            compiled.program.fingerprint,
+            compiled.target.fingerprint,
+            group.capacity,
+        )
+        return api.cached_callable(
+            key, lambda: jax.jit(jax.vmap(compiled.step()))
+        )
+
+    def _stream_frames(self, group: SlotPool, req: StencilRequest) -> None:
+        if req.frame_every <= 0:
+            return
+        emitted = False
+        while req.next_frame_at and req.steps_done >= req.next_frame_at:
+            req.next_frame_at += req.frame_every
+            emitted = True
+        if emitted and req.steps_done < req.n_steps:
+            # one snapshot per engine step at most — the state only
+            # changes at epoch boundaries, so coalescing crossed marks
+            # into the boundary snapshot is the honest cadence
+            req.emit_frame(group.read_slot(req.slot))
+            self.metrics.frames_emitted += 1
+
+    def _finish(self, group: SlotPool, req: StencilRequest) -> None:
+        req.result = group.read_slot(req.slot)
+        req.status = DONE
+        req.finished_at = now()
+        if req.frame_every and req.n_steps % req.frame_every == 0:
+            # final-state frame when the cadence lands exactly on n_steps
+            req.emit_frame(req.result)
+            self.metrics.frames_emitted += 1
+        self.finished.append(req)
+        self.metrics.requests_completed += 1
+        self.scheduler.reclaim(group, req.slot)

@@ -1,0 +1,94 @@
+"""Utilization and dispatch accounting for the stencil-serving engine.
+
+Per engine step the engine records a ``StepMetrics`` row (live slots over
+pool size, batched vs solo dispatch counts, per-fingerprint queue depth);
+``EngineMetrics`` aggregates them and folds in the process-wide compile
+cache counters (``repro.api.cache_stats``) as deltas since the engine was
+constructed, so a serving process can see exactly how many compiles its
+traffic caused vs reused.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+from repro import api
+
+
+@dataclasses.dataclass(frozen=True)
+class StepMetrics:
+    """One engine step's snapshot."""
+
+    engine_step: int
+    live_slots: int
+    pool_slots: int
+    queued: int
+    batched_dispatches: int   # dispatches batching >= 2 live requests
+    solo_dispatches: int      # dispatches advancing exactly 1 request
+    steps_advanced: int       # time steps advanced, summed over requests
+    queue_depth: dict         # "program_fp/target_fp" -> waiting requests
+
+    @property
+    def utilization(self) -> float:
+        """Live slots over pool slots for this step (0.0 on an idle
+        engine with no groups yet)."""
+        return self.live_slots / self.pool_slots if self.pool_slots else 0.0
+
+
+class EngineMetrics:
+    """Aggregated engine counters plus a bounded step history."""
+
+    def __init__(self, history_limit: int = 10_000) -> None:
+        self.history: deque = deque(maxlen=int(history_limit))
+        self.batched_dispatches = 0
+        self.solo_dispatches = 0
+        self.requests_submitted = 0
+        self.requests_completed = 0
+        self.frames_emitted = 0
+        self.steps_advanced = 0
+        stats = api.cache_stats()
+        self._cache_baseline = stats.as_dict()
+
+    # -- recording (engine-internal) ------------------------------------
+    def record_step(self, step: StepMetrics) -> None:
+        self.history.append(step)
+        self.batched_dispatches += step.batched_dispatches
+        self.solo_dispatches += step.solo_dispatches
+        self.steps_advanced += step.steps_advanced
+
+    # -- reporting -------------------------------------------------------
+    @property
+    def engine_steps(self) -> int:
+        return len(self.history)
+
+    def mean_utilization(self) -> float:
+        """Mean live/pool over the recorded (non-idle-pool) history."""
+        rows = [m for m in self.history if m.pool_slots]
+        if not rows:
+            return 0.0
+        return sum(m.utilization for m in rows) / len(rows)
+
+    def compile_cache(self) -> dict:
+        """Process-wide compile-cache counters as deltas since this
+        engine was constructed (hits = artifact/executable reuse across
+        this engine's traffic)."""
+        stats = api.cache_stats().as_dict()
+        return {
+            k: stats[k] - self._cache_baseline.get(k, 0) for k in stats
+        }
+
+    def snapshot(self, last: Optional[StepMetrics] = None) -> dict:
+        last = last or (self.history[-1] if self.history else None)
+        return {
+            "engine_steps": self.engine_steps,
+            "requests_submitted": self.requests_submitted,
+            "requests_completed": self.requests_completed,
+            "frames_emitted": self.frames_emitted,
+            "steps_advanced": self.steps_advanced,
+            "batched_dispatches": self.batched_dispatches,
+            "solo_dispatches": self.solo_dispatches,
+            "mean_utilization": self.mean_utilization(),
+            "compile_cache": self.compile_cache(),
+            "queue_depth": dict(last.queue_depth) if last else {},
+        }

@@ -1,0 +1,148 @@
+"""Fingerprint-bucketed slot pools and admission for the stencil engine.
+
+The vLLM-style slot-pool ideas from ``serve/engine.py`` (fixed pool,
+shape-stable executables, continuous admission) applied to stencil jobs:
+
+- live requests are grouped by **compile fingerprint**
+  ``(program.fingerprint, target.fingerprint)`` — the same key the
+  process-wide ``repro.api`` compile cache uses, so every member of a
+  group shares one ``CompiledStencil`` and (non-distributed) one vmapped
+  pool executable;
+- each group owns a fixed pool of ``capacity`` slots; the pooled state is
+  one array of shape ``[capacity, *field_shape]`` per input buffer, so
+  the batched dispatch is shape-stable regardless of how many slots are
+  live (dead slots compute garbage that is never read);
+- admission writes a request's initial state into its slot's rows;
+  reclaim frees the slot the moment the request's ``n_steps`` are done,
+  so a long request never stalls the short ones behind it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.serve.stencil.request import QUEUED, RUNNING, StencilRequest, now
+
+
+@dataclasses.dataclass
+class SlotPool:
+    """One fingerprint bucket: compiled artifact + fixed slot pool."""
+
+    key: tuple                  # (program fp, target fp)
+    compiled: Any               # repro.api.CompiledStencil
+    capacity: int
+    state: tuple = ()           # per input buffer: [capacity, *shape]
+    free: list = dataclasses.field(default_factory=list)
+    active: dict = dataclasses.field(default_factory=dict)  # slot -> request
+    queue: deque = dataclasses.field(default_factory=deque)
+
+    def __post_init__(self) -> None:
+        self.free = list(range(self.capacity))
+        if not self.state:
+            prog = self.compiled.program
+            self.state = tuple(
+                jnp.zeros(
+                    (self.capacity,)
+                    + tuple(prog.field_args[i].type.bounds.shape),
+                    jnp.float32,
+                )
+                for i in self.compiled.input_indices
+            )
+
+    @property
+    def live(self) -> int:
+        return len(self.active)
+
+    @property
+    def exchange_every(self) -> int:
+        return self.compiled.target.exchange_every
+
+    # -- slot state ------------------------------------------------------
+    def write_slot(self, slot: int, arrays) -> None:
+        self.state = tuple(
+            ps.at[slot].set(jnp.asarray(a, ps.dtype))
+            for ps, a in zip(self.state, arrays)
+        )
+
+    def read_slot(self, slot: int) -> tuple:
+        return tuple(ps[slot] for ps in self.state)
+
+    def rotate(self, outs: tuple) -> None:
+        """Pool-wide time-buffer rotation after one batched epoch —
+        identical shape to ``api.time_loop``: state' = state[len(outs):]
+        + outs, each leaf carrying the slot axis in front."""
+        self.state = tuple(self.state[len(outs):]) + tuple(outs)
+
+    def rotate_slot(self, slot: int, outs: tuple) -> None:
+        """Per-slot rotation for solo (distributed-target) dispatches."""
+        row = self.read_slot(slot)
+        new_row = tuple(row[len(outs):]) + tuple(outs)
+        self.write_slot(slot, new_row)
+
+
+class Scheduler:
+    """Admission + reclaim over all fingerprint buckets (FIFO per bucket)."""
+
+    def __init__(self, slots_per_group: int) -> None:
+        self.slots_per_group = int(slots_per_group)
+        self.groups: dict[tuple, SlotPool] = {}
+
+    def group_for(self, compiled, capacity: Optional[int] = None) -> SlotPool:
+        key = (compiled.program.fingerprint, compiled.target.fingerprint)
+        group = self.groups.get(key)
+        if group is None:
+            group = SlotPool(
+                key=key,
+                compiled=compiled,
+                capacity=int(capacity or self.slots_per_group),
+            )
+            self.groups[key] = group
+        return group
+
+    def enqueue(self, group: SlotPool, request: StencilRequest) -> None:
+        request.status = QUEUED
+        group.queue.append(request)
+
+    def admit(self, group: SlotPool) -> list:
+        """Move queued requests into free slots (FIFO); returns the newly
+        admitted requests.  Called at the top of every engine step and
+        again right after reclaim, so a freed slot is refilled within the
+        same engine step — continuous admission."""
+        admitted = []
+        while group.queue and group.free:
+            req = group.queue.popleft()
+            slot = group.free.pop(0)
+            req.slot = slot
+            req.status = RUNNING
+            req.started_at = now()
+            req.next_frame_at = req.frame_every if req.frame_every else 0
+            group.write_slot(slot, req.state)
+            group.active[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def reclaim(self, group: SlotPool, slot: int) -> None:
+        """Free a finished request's slot for immediate reuse."""
+        del group.active[slot]
+        group.free.append(slot)
+
+    # -- introspection ---------------------------------------------------
+    def queue_depths(self) -> dict:
+        return {
+            f"{k[0]}/{k[1]}": len(g.queue) for k, g in self.groups.items()
+        }
+
+    @property
+    def total_live(self) -> int:
+        return sum(g.live for g in self.groups.values())
+
+    @property
+    def total_slots(self) -> int:
+        return sum(g.capacity for g in self.groups.values())
+
+    @property
+    def total_queued(self) -> int:
+        return sum(len(g.queue) for g in self.groups.values())

@@ -1,0 +1,380 @@
+"""The stencil-serving engine: fingerprint-batched slot pools.
+
+Covers the ISSUE 6 acceptance surface: admission/reclaim ordering over a
+full pool, same-fingerprint coalescing (asserted through the engine's
+batched-vs-solo dispatch counters), bitwise equality of every request's
+final state against a solo ``compile(...).time_loop(...)`` run (heat and
+the newly-rotating wave under ``exchange_every=2``), streaming-frame
+cadence, utilization math — plus the LRU bound and truthful eviction
+counters of the process-wide compile cache.
+"""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import Target
+from repro.frontends.oec_like import ProgramBuilder
+from repro.serve.stencil import (
+    DONE,
+    QUEUED,
+    RUNNING,
+    Scheduler,
+    StencilEngine,
+    StencilEngineConfig,
+    StepMetrics,
+)
+
+
+def _heat(shape=(16, 16), alpha=0.25, boundary="periodic", name="heat_serve"):
+    p = ProgramBuilder(name, shape)
+    u = p.input("u")
+    out = p.output("out")
+    t = p.load(u)
+    r = p.apply(
+        [t],
+        lambda b, u: (u.at(-1, 0) + u.at(1, 0) + u.at(0, -1) + u.at(0, 1))
+        * alpha,
+    )
+    p.store(r, out)
+    return p.finish(boundary=boundary)
+
+
+def _wave(shape=(16, 16), boundary="zero", name="wave_serve"):
+    # p=2 inputs (u@t-1, u@t), q=1 output — exercises carried-state
+    # rotation inside the slot pool
+    p = ProgramBuilder(name, shape)
+    um = p.input("u_prev")
+    u0 = p.input("u_now")
+    out = p.output("u_next")
+    tm, t0 = p.load(um), p.load(u0)
+    r = p.apply(
+        [tm, t0],
+        lambda b, um, u0: 2.0 * u0.at(0, 0)
+        - um.at(0, 0)
+        + 0.1
+        * (
+            u0.at(-1, 0)
+            + u0.at(1, 0)
+            + u0.at(0, -1)
+            + u0.at(0, 1)
+            - 4.0 * u0.at(0, 0)
+        ),
+    )
+    p.store(r, out)
+    return p.finish(boundary=boundary)
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(
+        np.float32
+    )
+
+
+# -------------------------------------------------------------------------
+# scheduler: admission / reclaim ordering
+# -------------------------------------------------------------------------
+
+
+def test_admission_is_fifo_and_bounded_by_pool():
+    prog = _heat(name="heat_admit")
+    compiled = api.compile(prog, Target())
+    sched = Scheduler(slots_per_group=2)
+    group = sched.group_for(compiled)
+    from repro.serve.stencil.request import StencilRequest
+
+    reqs = [
+        StencilRequest(
+            rid=i,
+            program=prog,
+            target=compiled.target,
+            state=(_rand((16, 16), i),),
+            n_steps=2,
+        )
+        for i in range(4)
+    ]
+    for r in reqs:
+        sched.enqueue(group, r)
+    admitted = sched.admit(group)
+    # FIFO: the first two submitted run first; the rest wait queued
+    assert [r.rid for r in admitted] == [0, 1]
+    assert [r.status for r in reqs] == [RUNNING, RUNNING, QUEUED, QUEUED]
+    assert group.free == [] and len(group.queue) == 2
+    # reclaim frees the exact slot and the next FIFO request takes it
+    slot = reqs[0].slot
+    sched.reclaim(group, slot)
+    assert sched.admit(group)[0].rid == 2
+    assert reqs[2].slot == slot
+
+
+def test_group_for_reuses_bucket_per_fingerprint():
+    sched = Scheduler(slots_per_group=2)
+    a = api.compile(_heat(name="heat_fp_a"), Target())
+    g1 = sched.group_for(a)
+    g2 = sched.group_for(api.compile(_heat(name="heat_fp_a"), Target()))
+    assert g1 is g2  # same (program fp, target fp) → same slot pool
+    g3 = sched.group_for(api.compile(_heat(name="heat_fp_a"), Target(exchange_every=2)))
+    assert g3 is not g1  # different target fingerprint → new bucket
+
+
+# -------------------------------------------------------------------------
+# engine: coalescing, bitwise correctness, continuous admission
+# -------------------------------------------------------------------------
+
+
+def test_same_fingerprint_requests_coalesce_into_batched_dispatch():
+    prog = _heat(name="heat_coalesce")
+    eng = StencilEngine(StencilEngineConfig(slots_per_group=4))
+    for i in range(3):
+        eng.submit(prog, (_rand((16, 16), i),), n_steps=4)
+    m = eng.step()
+    # three live same-fingerprint requests advanced by ONE dispatch
+    assert m.live_slots == 3
+    assert m.batched_dispatches == 1 and m.solo_dispatches == 0
+    assert m.steps_advanced == 3
+    eng.run()
+    assert eng.metrics.solo_dispatches == 0  # never fell back to solo
+
+
+def test_final_state_bitwise_equals_solo_time_loop():
+    heat = _heat(name="heat_bitwise")
+    wave = _wave(name="wave_bitwise")
+    t1 = Target()
+    t2 = Target(exchange_every=2)
+    eng = StencilEngine(StencilEngineConfig(slots_per_group=3))
+    jobs = []
+    for i in range(3):
+        s = (_rand((16, 16), 10 + i),)
+        jobs.append((eng.submit(heat, s, n_steps=4 + 2 * i), heat, t1, s))
+    for i in range(2):
+        s = (_rand((16, 16), 20 + i), _rand((16, 16), 30 + i))
+        jobs.append((eng.submit(wave, s, n_steps=4, target=t2), wave, t2, s))
+    eng.run()
+    for handle, prog, target, state in jobs:
+        want = api.compile(prog, target).time_loop(state, handle._req.n_steps)
+        got = handle.result()
+        assert len(got) == len(want)
+        for w, o in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(o))
+
+
+def test_mixed_fingerprints_dispatch_independently():
+    heat = _heat(name="heat_mixed")
+    wave = _wave(name="wave_mixed")
+    eng = StencilEngine(StencilEngineConfig(slots_per_group=4))
+    for i in range(2):
+        eng.submit(heat, (_rand((16, 16), i),), n_steps=2)
+    eng.submit(
+        wave,
+        (_rand((16, 16), 5), _rand((16, 16), 6)),
+        n_steps=2,
+        target=Target(exchange_every=2),
+    )
+    m = eng.step()
+    # heat bucket (2 live) batched; wave bucket (1 live) went solo
+    assert m.batched_dispatches == 1 and m.solo_dispatches == 1
+    # wave advanced a whole epoch (2 steps), heat 1 step each
+    assert m.steps_advanced == 2 * 1 + 2
+
+
+def test_continuous_admission_refills_freed_slots_same_step():
+    prog = _heat(name="heat_refill")
+    eng = StencilEngine(StencilEngineConfig(slots_per_group=2))
+    handles = [
+        eng.submit(prog, (_rand((16, 16), i),), n_steps=1) for i in range(4)
+    ]
+    m = eng.step()
+    # both pool requests finished and both queued ones were admitted
+    # before the step returned — the pool never idles
+    assert handles[0].done and handles[1].done
+    assert handles[2].status == RUNNING and handles[3].status == RUNNING
+    assert m.queued == 0
+    eng.run()
+    assert all(h.done for h in handles)
+    assert eng.metrics.requests_completed == 4
+
+
+def test_submit_validates_epoch_alignment_and_shapes():
+    prog = _heat(name="heat_validate")
+    eng = StencilEngine()
+    with pytest.raises(ValueError, match="multiple"):
+        eng.submit(
+            prog, (_rand((16, 16), 0),), n_steps=3, target=Target(exchange_every=2)
+        )
+    with pytest.raises(ValueError, match="n_steps"):
+        eng.submit(prog, (_rand((16, 16), 0),), n_steps=0)
+    with pytest.raises(ValueError, match="shape"):
+        eng.submit(prog, (_rand((8, 8), 0),), n_steps=2)
+    with pytest.raises(ValueError, match="input buffer"):
+        eng.submit(prog, (_rand((16, 16), 0), _rand((16, 16), 1)), n_steps=2)
+
+
+def test_result_raises_until_done():
+    prog = _heat(name="heat_notdone")
+    eng = StencilEngine()
+    h = eng.submit(prog, (_rand((16, 16), 0),), n_steps=4)
+    with pytest.raises(RuntimeError, match="queued"):
+        h.result()
+    eng.step()
+    with pytest.raises(RuntimeError, match="running"):
+        h.result()
+    eng.run()
+    assert h.status == DONE
+    assert h.result() is not None
+
+
+# -------------------------------------------------------------------------
+# streaming frames
+# -------------------------------------------------------------------------
+
+
+def test_frame_cadence_callback_and_iterator():
+    prog = _heat(name="heat_frames")
+    eng = StencilEngine()
+    seen = []
+    h_cb = eng.submit(
+        prog,
+        (_rand((16, 16), 0),),
+        n_steps=6,
+        frame_every=2,
+        on_frame=seen.append,
+    )
+    h_pull = eng.submit(
+        prog, (_rand((16, 16), 1),), n_steps=6, frame_every=3
+    )
+    eng.run()
+    assert [f.step for f in seen] == [2, 4, 6]
+    assert all(f.rid == h_cb.rid for f in seen)
+    pulled = list(h_pull.frames())
+    assert [f.step for f in pulled] == [3, 6]
+    assert list(h_pull.frames()) == []  # iterator drains
+    # the cadence-final frame equals the result, and callback frames
+    # never double-buffer on the handle
+    np.testing.assert_array_equal(
+        pulled[-1].arrays[0], np.asarray(h_pull.result()[0])
+    )
+    assert list(h_cb.frames()) == []
+
+
+def test_epoch_target_frames_land_on_epoch_boundaries():
+    wave = _wave(name="wave_frames")
+    eng = StencilEngine()
+    h = eng.submit(
+        wave,
+        (_rand((16, 16), 0), _rand((16, 16), 1)),
+        n_steps=8,
+        target=Target(exchange_every=2),
+        frame_every=3,  # marks at 3 and 6 → snapshots at epochs 4 and 6
+    )
+    eng.run()
+    assert [f.step for f in h.frames()] == [4, 6]
+
+
+# -------------------------------------------------------------------------
+# metrics: utilization math
+# -------------------------------------------------------------------------
+
+
+def test_step_metrics_utilization_math():
+    m = StepMetrics(
+        engine_step=1,
+        live_slots=3,
+        pool_slots=4,
+        queued=2,
+        batched_dispatches=1,
+        solo_dispatches=0,
+        steps_advanced=3,
+        queue_depth={},
+    )
+    assert m.utilization == pytest.approx(0.75)
+    empty = StepMetrics(0, 0, 0, 0, 0, 0, 0, {})
+    assert empty.utilization == 0.0
+
+
+def test_engine_metrics_aggregate_and_cache_deltas():
+    prog = _heat(name="heat_metrics")
+    eng = StencilEngine(StencilEngineConfig(slots_per_group=2))
+    for i in range(2):
+        eng.submit(prog, (_rand((16, 16), i),), n_steps=2)
+    eng.run()
+    snap = eng.metrics.snapshot()
+    assert snap["requests_submitted"] == 2
+    assert snap["requests_completed"] == 2
+    assert snap["batched_dispatches"] == eng.metrics.batched_dispatches >= 1
+    assert snap["steps_advanced"] == 4
+    # full pool both steps → mean utilization 1.0
+    assert snap["mean_utilization"] == pytest.approx(1.0)
+    # cache counters are deltas since engine construction, never negative
+    assert all(v >= 0 for v in snap["compile_cache"].values())
+    # a second identical engine re-uses every compile artifact
+    eng2 = StencilEngine(StencilEngineConfig(slots_per_group=2))
+    eng2.submit(prog, (_rand((16, 16), 9),), n_steps=2)
+    eng2.run()
+    cache2 = eng2.metrics.compile_cache()
+    assert cache2["misses"] == 0 and cache2["hits"] >= 1
+
+
+def test_queue_depth_reports_per_fingerprint():
+    prog = _heat(name="heat_depth")
+    eng = StencilEngine(StencilEngineConfig(slots_per_group=1))
+    for i in range(3):
+        eng.submit(prog, (_rand((16, 16), i),), n_steps=2)
+    m = eng.step()
+    compiled = api.compile(prog, Target())
+    key = f"{compiled.program.fingerprint}/{compiled.target.fingerprint}"
+    assert m.queue_depth[key] == 2  # 1 running (pool=1), 2 still waiting
+    eng.run()
+    assert eng.scheduler.queue_depths()[key] == 0
+
+
+# -------------------------------------------------------------------------
+# LRU compile cache bound (satellite: api.py)
+# -------------------------------------------------------------------------
+
+
+def test_cache_capacity_bounds_entries_and_counts_evictions():
+    prev = api.set_cache_capacity(2)
+    try:
+        api.clear_cache()
+        progs = [_heat(alpha=0.1 * (i + 1), name=f"heat_lru{i}") for i in range(3)]
+        for p in progs:
+            api.compile(p, Target())
+        stats = api.cache_stats()
+        assert stats.misses == 3
+        assert stats.evictions == 1  # capacity 2, third insert evicts oldest
+        assert len(api._CACHE) == 2
+        # the evicted (oldest) program recompiles: miss, and evicts again
+        api.compile(progs[0], Target())
+        stats = api.cache_stats()
+        assert stats.misses == 4 and stats.evictions == 2
+        # the most-recent entry is still cached: a true hit
+        api.compile(progs[0], Target())
+        assert api.cache_stats().hits >= 1
+    finally:
+        api.set_cache_capacity(prev)
+        api.clear_cache()
+
+
+def test_cache_hit_refreshes_lru_order():
+    prev = api.set_cache_capacity(2)
+    try:
+        api.clear_cache()
+        a = _heat(alpha=0.11, name="heat_lru_a")
+        b = _heat(alpha=0.12, name="heat_lru_b")
+        c = _heat(alpha=0.13, name="heat_lru_c")
+        api.compile(a, Target())
+        api.compile(b, Target())
+        api.compile(a, Target())  # refresh a → b is now oldest
+        api.compile(c, Target())  # evicts b, not a
+        misses = api.cache_stats().misses
+        api.compile(a, Target())  # still cached
+        assert api.cache_stats().misses == misses
+        api.compile(b, Target())  # was evicted → recompiles
+        assert api.cache_stats().misses == misses + 1
+    finally:
+        api.set_cache_capacity(prev)
+        api.clear_cache()
+
+
+def test_set_cache_capacity_validates():
+    with pytest.raises(ValueError, match=">= 1"):
+        api.set_cache_capacity(0)

@@ -154,16 +154,44 @@ def test_boundary_mask_only_for_zero_bc():
     assert masks("zero", 1) == 0
 
 
-def test_rejects_non_rotating_state():
-    """time_order-2 (wave-style) programs carry state across epochs that a
-    single epoch call cannot return — must fail loudly at validation."""
+@pytest.mark.parametrize("k", [1, 2])
+@pytest.mark.parametrize("boundary", ["zero", "periodic"])
+def test_wave_rotates_closed_bitwise(k, boundary):
+    """time_order-2 (wave-style) programs carry p=2 buffers through a
+    q=1 output: the epoch now emits the carried state into the dead
+    oldest buffer, so a k-step epoch returns the FULL rotated state and
+    exchange_every>1 is bitwise-equal to the per-step baseline."""
     from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
 
     g = Grid(shape=(32, 32), extent=(1.0, 1.0))
     u = TimeFunction(name="u", grid=g, space_order=2, time_order=2)
-    op = Operator(Eq(u.dt2, u.laplace), dt=1e-3)
+    op = Operator(Eq(u.dt2, u.laplace), dt=1e-3, boundary=boundary)
+    rng = np.random.default_rng(7)
+    state = tuple(
+        rng.standard_normal((32, 32)).astype(np.float32) for _ in range(2)
+    )
+    base = api.compile(op.program, Target())
+    tiled = api.compile(op.program, Target(exchange_every=k))
+    want = base.time_loop(state, 4)
+    got = tiled.time_loop(state, 4)
+    assert len(got) == 2  # full rotated state: (u@t+3, u@t+4)
+    for w, o in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(o))
+
+
+def test_rejects_more_outputs_than_inputs():
+    """q > p state can never rotate closed — must still fail loudly at
+    validation (no input buffer exists to carry the extra output)."""
+    p = ProgramBuilder("two_out", (16, 16))
+    u = p.input("u")
+    a = p.output("a")
+    b = p.output("b")
+    t = p.load(u)
+    r = p.apply([t], lambda bb, uu: uu.at(0, 0) * 0.5)
+    p.store(r, a)
+    p.store(r, b)
     with pytest.raises(TargetError, match="rotate"):
-        api.compile(op.program, Target(exchange_every=2))
+        api.compile(p.finish(), Target(exchange_every=2))
 
 
 def test_rejects_position_dependent_bodies():
