@@ -26,7 +26,8 @@ def _hlo_op_count(fn, *args) -> int:
 
 
 def run(fast: bool = False, overlap: str = "off",
-        exchange_every: int = 1, tune: bool = False) -> dict:
+        exchange_every: int = 1, tune: bool = False,
+        fused_epoch: bool = False) -> dict:
     """``overlap="on"`` adds a variant compiled through the IR-level
     ``split_overlapped_applies`` path (interior/frame split + combine),
     so the rewrite's overhead/win is measurable against ``jnp_opt`` on
@@ -35,7 +36,10 @@ def run(fast: bool = False, overlap: str = "off",
     epoch must equal k sequential ``jnp_opt`` steps, and its throughput
     is reported *per step* so the redundant-compute overhead is visible.
     ``tune=True`` adds the autotuner's winner (``Target.tuned``,
-    measured search) as a variant, recorded with tuned provenance."""
+    measured search) as a variant, recorded with tuned provenance.
+    ``fused_epoch=True`` adds the k=4 pallas pair — per-step dispatch vs
+    ONE megakernel per epoch (``Target(fused_epoch=True)``) — validated
+    bitwise against each other and allclose against jnp_opt steps."""
     shape = (256, 256) if fast else (1024, 1024)
     g = Grid(shape=shape, extent=(1.0, 1.0))
     u = TimeFunction(name="u", grid=g, space_order=8)
@@ -99,6 +103,53 @@ def run(fast: bool = False, overlap: str = "off",
         rows.append((name, f"{gpts(shape, sec):.3f}",
                      f"allclose == {k}× jnp_opt"))
 
+    if fused_epoch:
+        # the epoch-megakernel pair: k=4 pallas epoch, k kernel
+        # dispatches vs ONE.  Correctness on the jitted pair — bitwise
+        # against each other (DESIGN.md §10), allclose against jnp.
+        # Throughput on the *eager* pair: jit inlines both into the same
+        # XLA module (launch count vanishes), so eager dispatch is where
+        # the k-vs-1 launch overhead is actually measurable on CPU — and
+        # it mirrors the real-device situation, where pallas kernels are
+        # opaque custom calls XLA cannot fuse across.
+        k = 4
+        op = Operator(Eq(u.dt, 0.5 * u.laplace), dt=1e-7, boundary="zero")
+        base_step = op.compile_step(target=variants["jnp_opt"])
+        want = u0
+        for _ in range(k):
+            want = base_step(want)[0]
+        unfused_jit = op.compile_step(target=Target(
+            backend="pallas", exchange_every=k, pallas_interpret=True))
+        fused_jit = op.compile_step(target=Target(
+            backend="pallas", exchange_every=k, fused_epoch=True,
+            pallas_interpret=True))
+        a, b = unfused_jit(u0)[0], fused_jit(u0)[0]  # one epoch == k steps
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_allclose(
+            np.asarray(want), np.asarray(b), rtol=1e-6, atol=1e-6
+        )
+        pair = {
+            f"pallas_ee{k}": Target(
+                backend="pallas", exchange_every=k, jit=False,
+                pallas_interpret=True,
+            ),
+            f"pallas_fused_ee{k}": Target(
+                backend="pallas", exchange_every=k, fused_epoch=True,
+                jit=False, pallas_interpret=True,
+            ),
+        }
+        for name, target in pair.items():
+            step = op.compile_step(target=target)
+            sec = time_step(lambda a: step(a), (u0,), iters=5, warmup=2) / k
+            record[name] = {
+                "sec": sec,
+                "gpts": gpts(shape, sec),
+                "target": target_record(target, "manual"),
+            }
+            launches = "1 kernel" if target.fused_epoch else f"{k} kernels"
+            note = f"{launches}/epoch, eager, {sec * 1e3:.1f} ms/step"
+            rows.append((name, f"{gpts(shape, sec):.3f}", note))
+
     if tune:
         # the autotuner's pick for this program on this machine (measured
         # search, persisted in the on-disk tune cache); validated against
@@ -143,6 +194,9 @@ if __name__ == "__main__":
                          "variant (bitwise-checked against k jnp_opt steps)")
     ap.add_argument("--tune", action="store_true",
                     help="add the repro.tune winner as a measured variant")
+    ap.add_argument("--fused-epoch", action="store_true",
+                    help="add the k=4 pallas per-step vs fused-megakernel "
+                         "pair (bitwise-checked against each other)")
     a = ap.parse_args()
     run(fast=a.fast, overlap=a.overlap, exchange_every=a.exchange_every,
-        tune=a.tune)
+        tune=a.tune, fused_epoch=a.fused_epoch)

@@ -22,7 +22,11 @@ CASES = [
 ORDERS = (2, 4, 8)
 
 
-def run(fast: bool = False, tune: bool = False) -> dict:
+def run(fast: bool = False, tune: bool = False,
+        fused_epoch: bool = False) -> dict:
+    """``fused_epoch=True`` times the pallas epoch-megakernel target
+    (k=4, one kernel dispatch per epoch) instead of the default jnp
+    path; the recorded ``target`` dict carries the axes either way."""
     cases = CASES if not fast else [(2, (256, 256), 4)]
     rows, record = [], {}
     for ndim, shape, steps in cases:
@@ -36,6 +40,10 @@ def run(fast: bool = False, tune: bool = False) -> dict:
                 # ranks=1 keeps tuned rows comparable with the manual
                 # single-device rows on multi-device hosts
                 target = Target.tuned(op.program, ranks=1, measure=False)
+            elif fused_epoch:
+                target = Target(
+                    backend="pallas", exchange_every=4, fused_epoch=True
+                )
             else:
                 target = Target()
             step = op.compile_step(target=target)
@@ -64,4 +72,13 @@ def run(fast: bool = False, tune: bool = False) -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--tune", action="store_true")
+    ap.add_argument("--fused-epoch", action="store_true",
+                    help="time the pallas epoch-megakernel target "
+                         "(k=4, one kernel dispatch per epoch)")
+    a = ap.parse_args()
+    run(fast=a.fast, tune=a.tune, fused_epoch=a.fused_epoch)

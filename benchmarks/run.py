@@ -24,6 +24,9 @@ def main() -> int:
                     help="autotune Targets (repro.tune) in benches that "
                          "support it; records carry tuned-vs-manual "
                          "provenance")
+    ap.add_argument("--fused-epoch", action="store_true",
+                    help="add/time the pallas epoch-megakernel variants "
+                         "in benches that support them")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -49,8 +52,11 @@ def main() -> int:
         print(f"\n=== {name} ===")
         t0 = time.time()
         kwargs = {"fast": args.fast}
-        if args.tune and "tune" in inspect.signature(benches[name]).parameters:
+        params = inspect.signature(benches[name]).parameters
+        if args.tune and "tune" in params:
             kwargs["tune"] = True
+        if args.fused_epoch and "fused_epoch" in params:
+            kwargs["fused_epoch"] = True
         try:
             benches[name](**kwargs)
             print(f"[{name} done in {time.time()-t0:.1f}s]")

@@ -223,6 +223,46 @@ print(f"serve smoke OK: {snap['batched_dispatches']} batched / "
       f"{snap['engine_steps']} engine steps, all results bitwise-equal")
 EOF
 
+echo "== fused-epoch smoke =="
+python - <<'EOF'
+# Target(exchange_every=4, fused_epoch=True): the whole epoch must be
+# exactly ONE pallas kernel dispatch (trace counter + IR census) and
+# bitwise-equal to the unfused pallas path over two epochs
+import numpy as np
+
+from repro import api, kernels
+from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
+
+grid = Grid(shape=(64, 64), extent=(1.0, 1.0))
+u = TimeFunction(name="u", grid=grid, space_order=2)
+dt = 0.8 * grid.spacing[0] ** 2 / (4 * 0.5)
+heat = Operator(Eq(u.dt, 0.5 * u.laplace), dt=dt, boundary="zero").program
+
+unfused = api.compile(heat, api.Target(
+    backend="pallas", exchange_every=4, pallas_interpret=True))
+fused = api.compile(heat, api.Target(
+    backend="pallas", exchange_every=4, fused_epoch=True,
+    pallas_interpret=True))
+assert fused.kernel_dispatches == {"fused_epoch": 1, "apply": 0, "total": 1}, (
+    fused.kernel_dispatches
+)
+assert unfused.kernel_dispatches["apply"] == 4, unfused.kernel_dispatches
+
+rng = np.random.default_rng(0)
+u0 = rng.standard_normal((64, 64)).astype(np.float32)
+kernels.reset_dispatch_stats()
+a = fused.time_loop((u0,), 8)[0]  # 2 epochs
+stats = kernels.dispatch_stats().as_dict()  # live object: snapshot now
+assert stats["fused_epoch_calls"] == 1 and stats["apply_calls"] == 0, (
+    stats  # jit traces the epoch once: 1 kernel per epoch
+)
+b = unfused.time_loop((u0,), 8)[0]
+a, b = np.asarray(a), np.asarray(b)
+assert np.array_equal(a, b), f"fused != unfused, max {np.abs(a-b).max()}"
+print(f"fused-epoch smoke OK: one kernel per k=4 epoch "
+      f"(trace stats {stats}), 8-step outputs bitwise-equal")
+EOF
+
 if [[ "${1:-}" == "--smoke" ]]; then
   echo "smoke only: skipping tier-1 tests"
   exit 0

@@ -166,7 +166,16 @@ class Target:
     # *epoch* of k time steps; ``time_loop`` keeps counting single steps
     # and iterates in epochs.  1 = one exchange per step (the baseline).
     exchange_every: int = 1
-    pallas_interpret: bool = True  # CPU container: interpret kernels
+    # Fuse each epoch's apply chain into ONE Pallas megakernel
+    # (fuse-epoch-kernel pass + kernels/epoch_kernel.py): the k sub-steps'
+    # intermediates stay in fast memory, one pallas_call dispatch per
+    # epoch instead of k.  Requires backend="pallas"; incompatible with
+    # overlap (split frame applies cannot fuse into one kernel).
+    fused_epoch: bool = False
+    # None resolves via kernels.default_interpret(): interpret mode on
+    # CPU-only hosts (the correctness oracle), native Pallas when an
+    # accelerator is present; REPRO_PALLAS_INTERPRET overrides.
+    pallas_interpret: Optional[bool] = None
     pallas_tile: Optional[tuple] = None
     # Donate every field buffer to jit (classic double-buffer rotation:
     # the caller hands over ownership; inputs are invalidated after the
@@ -181,6 +190,27 @@ class Target:
             )
         if self.pallas_tile is not None:
             object.__setattr__(self, "pallas_tile", tuple(self.pallas_tile))
+        if self.pallas_interpret is None:
+            from repro.kernels import default_interpret
+
+            object.__setattr__(self, "pallas_interpret", default_interpret())
+        else:
+            object.__setattr__(
+                self, "pallas_interpret", bool(self.pallas_interpret)
+            )
+        if self.fused_epoch:
+            if self.backend != "pallas":
+                raise TargetError(
+                    f"Target(fused_epoch=True) requires backend='pallas' "
+                    f"(the epoch megakernel IS a pallas_call), got "
+                    f"backend={self.backend!r}"
+                )
+            if self.overlap:
+                raise TargetError(
+                    "Target(fused_epoch=True) is incompatible with "
+                    "overlap=True: split interior/frame applies cannot fuse "
+                    "into one epoch kernel"
+                )
         if int(self.exchange_every) != self.exchange_every or self.exchange_every < 1:
             raise TargetError(
                 f"exchange_every must be a positive integer (1 = exchange "
@@ -194,6 +224,18 @@ class Target:
             # an explicit pipeline must agree with exchange_every: the
             # time_loop epoch arithmetic is driven by the Target knob
             k_spec = 1
+            has_fuse_stage = any(
+                name == "fuse-epoch-kernel" for name, _ in stages
+            )
+            if has_fuse_stage != self.fused_epoch:
+                raise TargetError(
+                    f"explicit pipeline "
+                    f"{'contains' if has_fuse_stage else 'lacks'} the "
+                    f"fuse-epoch-kernel stage but "
+                    f"Target(fused_epoch={self.fused_epoch}); set both "
+                    "consistently (the kernel routing is driven by the "
+                    "Target knob)"
+                )
             for name, opts in stages:
                 if name == "temporal-tile":
                     try:
@@ -294,6 +336,10 @@ class Target:
         if self.overlap:
             stages.append("overlap")
         stages.append("lower-comm")
+        if self.fused_epoch:
+            # after lower-comm: the fused region holds only apply +
+            # boundary_mask ops; exchanges stay outside the kernel
+            stages.append("fuse-epoch-kernel")
         return ",".join(stages)
 
     @property
@@ -326,6 +372,7 @@ class Target:
                 # explicit ``pipeline`` must still produce distinct cached
                 # artifacts per epoch depth (time_loop arithmetic differs)
                 f"exchange_every={self.exchange_every}",
+                f"fused_epoch={self.fused_epoch}",
                 f"pallas_interpret={self.pallas_interpret}",
                 f"pallas_tile={self.pallas_tile}",
                 f"donate={self.donate}",
@@ -448,6 +495,30 @@ class CompiledStencil:
         )
 
     # -- inspection ------------------------------------------------------
+    @property
+    def kernel_dispatches(self) -> dict:
+        """Static kernel-op census of one epoch of the compiled program:
+        how many fused-epoch megakernels and how many standalone applies
+        the local IR executes per call.  With ``Target(fused_epoch=True)``
+        an epoched program reads ``{"fused_epoch": 1, "apply": 0, ...}`` —
+        one kernel dispatch per epoch (cross-checked at trace time by
+        ``repro.kernels.dispatch_stats``)."""
+        fused = sum(
+            1
+            for op in self.local_ir.body.ops
+            if isinstance(op, stencil.FusedEpochOp)
+        )
+        applies = sum(
+            1
+            for op in self.local_ir.body.ops
+            if isinstance(op, stencil.ApplyOp)
+        )
+        return {
+            "fused_epoch": fused,
+            "apply": applies,
+            "total": fused + applies,
+        }
+
     def lower(self, dtype=jnp.float32):
         """AOT-lower with ShapeDtypeStruct inputs (no allocation) — the
         dry-run entry point: ``.lower().compile().memory_analysis()``."""
@@ -700,8 +771,8 @@ def _validate_pallas_tile(program: Program, target: Target) -> None:
     if any(int(t) < 1 for t in tile):
         raise TargetError(f"pallas_tile {tile} must be positive")
     spec = target.pipeline_spec()
-    if "overlap" in spec or "temporal-tile" in spec:
-        return  # lowering auto-tiles split/epoched applies that mismatch
+    if "overlap" in spec or "temporal-tile" in spec or "fuse-epoch-kernel" in spec:
+        return  # lowering auto-tiles split/epoched/fused applies that mismatch
     s = target.strategy
     grid_of_dim = {}
     if s is not None:

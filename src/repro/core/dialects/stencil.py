@@ -301,6 +301,96 @@ class CombineOp(Operation):
                 )
 
 
+class FusedEpochOp(Operation):
+    """``%out… = stencil.fused_epoch(%in…) ({ epoch body })`` — one deep-halo
+    epoch's apply chain packaged for single-kernel code generation.
+
+    Produced by the ``fuse-epoch-kernel`` pass from the k-times-unrolled
+    chain that ``temporal-tile{k}`` emits: the region holds the grown
+    ``stencil.apply`` clones (plus any ``comm.boundary_mask`` re-zeroing)
+    in program order, with block arguments mirroring the operands (the
+    values the chain reads from outside) and a ``stencil.fused_yield``
+    terminator carrying the values that escape the chain.  The kernel
+    backend lowers the whole region to ONE ``pl.pallas_call`` so the k
+    sub-steps stay in fast memory; the interpreter backends evaluate the
+    region inline.
+
+    ``k`` records the epoch depth (1 for an untiled program — fusing a
+    plain apply chain is legal and still saves dispatches).
+    """
+
+    name = "stencil.fused_epoch"
+
+    #: region op names a fused epoch may contain (terminator last).
+    FUSABLE_NAMES = ("stencil.apply", "comm.boundary_mask")
+
+    def __init__(
+        self,
+        args: Sequence[SSAValue],
+        result_types: Sequence[TypeAttribute],
+        k: int = 1,
+    ) -> None:
+        from repro.core.ir import IntAttr
+
+        region = Region.empty([a.type for a in args])
+        super().__init__(
+            operands=list(args),
+            result_types=list(result_types),
+            regions=[region],
+            attributes={"k": IntAttr(int(k))},
+        )
+
+    @property
+    def body(self):
+        return self.regions[0].block
+
+    @property
+    def k(self) -> int:
+        return self.attributes["k"].value  # type: ignore[attr-defined]
+
+    def verify_(self) -> None:
+        if len(self.body.args) != len(self.operands):
+            raise VerificationError(
+                "stencil.fused_epoch region arg count != operand count"
+            )
+        for arg, operand in zip(self.body.args, self.operands):
+            if arg.type != operand.type:
+                raise VerificationError(
+                    f"stencil.fused_epoch region arg type {arg.type} != "
+                    f"operand type {operand.type}"
+                )
+        ops = self.body.ops
+        if not ops or not isinstance(ops[-1], FusedYieldOp):
+            raise VerificationError(
+                "stencil.fused_epoch must end in stencil.fused_yield"
+            )
+        for op in ops[:-1]:
+            if op.name not in self.FUSABLE_NAMES:
+                raise VerificationError(
+                    f"stencil.fused_epoch region holds non-fusable op "
+                    f"{op.name!r}"
+                )
+        yielded = ops[-1].operands
+        if len(yielded) != len(self.results):
+            raise VerificationError(
+                "stencil.fused_yield arity != stencil.fused_epoch result arity"
+            )
+        for y, r in zip(yielded, self.results):
+            if y.type != r.type:
+                raise VerificationError(
+                    f"stencil.fused_yield type {y.type} != result type {r.type}"
+                )
+
+
+class FusedYieldOp(Operation):
+    """Terminates a stencil.fused_epoch region with the escaping values."""
+
+    name = "stencil.fused_yield"
+
+    def __init__(self, values: Sequence[SSAValue]) -> None:
+        super().__init__(operands=list(values))
+
+
 class AccessOp(Operation):
     """``%v = stencil.access %t [offset]`` — read a temp at a relative offset."""
 

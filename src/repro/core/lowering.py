@@ -241,6 +241,8 @@ class StencilInterpreter:
             self._exec_comm_wait(op, env)
         elif isinstance(op, comm.BoundaryMaskOp):
             env[op.results[0]] = self._exec_boundary_mask(op, env[op.temp])
+        elif isinstance(op, stencil.FusedEpochOp):
+            self._exec_fused_epoch(op, env)
         elif isinstance(op, comm.AllReduceOp):
             v = env[op.operands[0]]
             red = {"sum": lax.psum, "max": lax.pmax, "min": lax.pmin}[op.op]
@@ -314,14 +316,17 @@ class StencilInterpreter:
         # local emulation: every grid axis has size 1
         return patch if periodic else jnp.zeros_like(patch)
 
-    def _exec_boundary_mask(self, op: comm.BoundaryMaskOp, x):
-        """Zero every point outside the physical (global) domain — the
-        temporal-tiling analogue of the zero-BC halo_pad, applied to
-        redundantly-computed epoch intermediates.  Rank-position-aware
-        (lax.axis_index) but communication-free."""
+    def _boundary_keep(self, op: comm.BoundaryMaskOp, shape: tuple):
+        """Boolean keep-mask over ``shape`` for a boundary_mask op (True =
+        inside the physical global domain), or ``None`` when every point
+        is inside.  Rank-position-aware (lax.axis_index) but
+        communication-free — shared by the inline interpreter path and the
+        fused-epoch kernel, which precomputes the mask outside the kernel
+        (axis_index is unavailable in a Pallas body)."""
         vb: stencil.Bounds = op.temp.type.bounds
         core: stencil.Bounds = op.core
         grid: dmp.GridAttr = op.grid
+        keep = None
         for d in range(vb.rank):
             if core.lb[d] <= vb.lb[d] and vb.ub[d] <= core.ub[d]:
                 continue  # no points outside this shard's core along d
@@ -332,13 +337,60 @@ class StencilInterpreter:
                 coord = lax.axis_index(grid.axis_names[gax])
             else:
                 coord = 0
-            pos = lax.broadcasted_iota(jnp.int32, x.shape, d) + jnp.int32(
+            pos = lax.broadcasted_iota(jnp.int32, shape, d) + jnp.int32(
                 vb.lb[d] - core.lb[d]
             )
             glob = coord * n + pos
-            keep = (glob >= 0) & (glob < grid_extent * n)
-            x = jnp.where(keep, x, jnp.zeros_like(x))
-        return x
+            k = (glob >= 0) & (glob < grid_extent * n)
+            keep = k if keep is None else keep & k
+        return keep
+
+    def _exec_boundary_mask(self, op: comm.BoundaryMaskOp, x):
+        """Zero every point outside the physical (global) domain — the
+        temporal-tiling analogue of the zero-BC halo_pad, applied to
+        redundantly-computed epoch intermediates."""
+        keep = self._boundary_keep(op, tuple(x.shape))
+        if keep is None:
+            return x
+        return jnp.where(keep, x, jnp.zeros_like(x))
+
+    def _exec_fused_epoch(self, op: stencil.FusedEpochOp, env) -> None:
+        """Route a fused epoch through the megakernel (pallas backend) or
+        evaluate its region inline (jnp reference).  Boundary keep-masks
+        are materialized as 0/1 arrays here — outside the kernel — and
+        passed in as extra inputs."""
+        arrays = [env[o] for o in op.operands]
+        masks = []
+        for inner in op.body.ops:
+            if isinstance(inner, comm.BoundaryMaskOp):
+                shape = inner.temp.type.bounds.shape
+                keep = self._boundary_keep(inner, shape)
+                masks.append(
+                    jnp.ones(shape, jnp.float32)
+                    if keep is None
+                    else keep.astype(jnp.float32)
+                )
+        if self.backend == "pallas":
+            from repro.kernels.epoch_kernel import run_epoch_pallas
+
+            outs = run_epoch_pallas(
+                op,
+                arrays,
+                masks,
+                tile=self.pallas_tile,
+                interpret=self.pallas_interpret,
+            )
+        else:
+            from repro.kernels.epoch_kernel import _emit_region
+
+            outs = _emit_region(
+                op,
+                [jnp.asarray(a, jnp.float32) for a in arrays],
+                masks,
+                lambda v: v.type.bounds,
+            )
+        for res, arr in zip(op.results, outs):
+            env[res] = arr
 
     def _exec_comm_wait(self, op: comm.WaitOp, env) -> None:
         x = env[op.temp]

@@ -89,6 +89,7 @@ from repro.core.passes.temporal import (  # noqa: E402,F401
     epoch_halo,
     temporal_tile,
 )
+from repro.core.passes.fuse_epoch import fuse_epoch_kernels  # noqa: E402,F401
 
 
 # --------------------------------------------------------------------------
@@ -279,6 +280,9 @@ PASS_REGISTRY: dict[str, Callable] = {
         "split-overlap", split_overlapped_applies
     ),
     "lower-comm": _make_simple("lower-comm", lower_dmp_to_comm),
+    # package each epoch's apply chain into ONE stencil.fused_epoch op so
+    # the kernel backend emits a single pallas_call per epoch
+    "fuse-epoch-kernel": _make_simple("fuse-epoch-kernel", fuse_epoch_kernels),
 }
 
 

@@ -1,3 +1,71 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel layer: Pallas code generation for stencil compute hot-spots.
+
+Shared here (imported by ``api``, ``tune`` and the kernels themselves):
+
+- :func:`has_accelerator` / :func:`default_interpret` — the one source of
+  truth for whether Pallas kernels run in interpret mode.  Interpret is
+  the CPU-container default and the correctness oracle; on a real GPU/TPU
+  the default flips to the native (non-interpret) path.  Overridable with
+  ``REPRO_PALLAS_INTERPRET=0|1``.
+- :func:`dispatch_stats` — trace-time kernel-dispatch counters.  Every
+  ``pl.pallas_call`` the backend traces bumps a counter, so a test can
+  assert "one epoch == ONE kernel dispatch" by resetting, tracing one
+  epoch, and reading the deltas (under ``jit`` the counters move at trace
+  time, once per compilation, which is exactly the dispatch count of the
+  compiled program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+
+def has_accelerator() -> bool:
+    """True when JAX sees a GPU/TPU device."""
+    import jax
+
+    try:
+        return any(d.platform in ("gpu", "tpu") for d in jax.devices())
+    except Exception:  # noqa: BLE001 - no backend at all counts as "no"
+        return False
+
+
+def default_interpret() -> bool:
+    """Resolved default for ``Target.pallas_interpret=None``: interpret on
+    CPU-only hosts, native Pallas when an accelerator is present.
+    ``REPRO_PALLAS_INTERPRET`` (0/1) overrides the device probe."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off")
+    return not has_accelerator()
+
+
+@dataclasses.dataclass
+class DispatchStats:
+    """Counts of Pallas kernels *traced* since the last reset."""
+
+    apply_calls: int = 0        # per-apply kernels (kernels/stencil_apply.py)
+    fused_epoch_calls: int = 0  # epoch megakernels (kernels/epoch_kernel.py)
+
+    @property
+    def pallas_calls(self) -> int:
+        return self.apply_calls + self.fused_epoch_calls
+
+    def as_dict(self) -> dict:
+        return {
+            "apply_calls": self.apply_calls,
+            "fused_epoch_calls": self.fused_epoch_calls,
+            "pallas_calls": self.pallas_calls,
+        }
+
+
+_DISPATCH = DispatchStats()
+
+
+def dispatch_stats() -> DispatchStats:
+    return _DISPATCH
+
+
+def reset_dispatch_stats() -> None:
+    _DISPATCH.apply_calls = 0
+    _DISPATCH.fused_epoch_calls = 0

@@ -1,0 +1,245 @@
+"""Pallas epoch megakernel: ONE ``pl.pallas_call`` per deep-halo epoch.
+
+Code-generates the whole region of a :class:`stencil.FusedEpochOp` — the
+k-times-unrolled apply chain ``temporal-tile{k}`` produces, plus its
+``comm.boundary_mask`` re-zeroing — into a single Pallas kernel body
+(DESIGN.md §10).  Where ``kernels/stencil_apply.py`` dispatches one
+kernel per apply (k HBM round-trips per epoch), here the k sub-steps'
+intermediates are values *inside* the kernel: XLA/Mosaic keeps them in
+VMEM/registers, time-buffer rotation is value rebinding, and the
+shrinking redundant-boundary frames are just each sub-step's (smaller)
+result bounds.
+
+Two kernel modes, selected per call:
+
+- **whole-shard** (default): a grid-free ``pallas_call`` whose refs are
+  the full shard arrays; every sub-step computes its full grown frame.
+  Always applicable — this is the mode the CPU interpret oracle runs.
+- **tiled**: when every escaping value shares one core bounds ``C`` and
+  the tile divides ``C``, the kernel runs on a grid over ``C`` with
+  overlapping element-indexed input windows sized by the *accumulated*
+  epoch halo demand (window = tile + (value bounds − C) per value); each
+  tile redundantly recomputes its neighbours' frame overlap — the
+  standard overlapped-tiling time-tile trade.
+
+Boundary masks are precomputed OUTSIDE the kernel (they need the rank's
+grid position via ``lax.axis_index``, unavailable in a kernel body) and
+passed in as 0/1 float arrays; inside, masking is a ``jnp.where`` —
+bitwise-identical to the interpreter's ``_exec_boundary_mask``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.dialects import comm, stencil
+from repro.kernels import _DISPATCH
+from repro.kernels.stencil_apply import choose_tile
+
+
+def _region_values(fused_op: stencil.FusedEpochOp) -> list:
+    """Every SSA value live in the region: block args + member results."""
+    vals = list(fused_op.body.args)
+    for op in fused_op.body.ops:
+        vals.extend(op.results)
+    return vals
+
+
+def _uses_index(fused_op: stencil.FusedEpochOp) -> bool:
+    return any(
+        isinstance(inner, stencil.IndexOp)
+        for op in fused_op.body.ops
+        if isinstance(op, stencil.ApplyOp)
+        for inner in op.body.ops
+    )
+
+
+def _emit_region(fused_op, inputs, mask_blocks, bounds_of) -> list:
+    """Evaluate the fused region over arrays/blocks.  ``bounds_of`` maps a
+    region value to the bounds its array covers — actual logical bounds in
+    whole-shard mode, tile-relative bounds in tiled mode.  The same code
+    runs on jnp arrays (interpreter fallback) and on VMEM blocks.
+
+    Bitwise caveat: under ``jit`` the fused kernel is exactly the k
+    inlined per-step bodies the unfused path traces, so results are
+    bitwise-identical.  *Eagerly* (``Target(jit=False)``) the unfused
+    path compiles one XLA module per step while the fused kernel is one
+    module for all k — XLA CPU's per-module codegen (FMA contraction)
+    then drifts ~1ulp on non-power-of-two coefficients, and an
+    ``optimization_barrier`` between sub-steps does not stop it.  The
+    bitwise oracle therefore compares jitted targets."""
+    from repro.core.lowering import eval_apply_body
+
+    env = dict(zip(fused_op.body.args, inputs))
+    mask_idx = 0
+    for op in fused_op.body.ops:
+        if isinstance(op, stencil.ApplyOp):
+            arrays = [env[o] for o in op.operands]
+            origins = [bounds_of(o).lb for o in op.operands]
+            outs = eval_apply_body(op, arrays, origins, bounds_of(op.results[0]))
+            for res, val in zip(op.results, outs):
+                env[res] = val
+        elif isinstance(op, comm.BoundaryMaskOp):
+            mask = mask_blocks[mask_idx]
+            mask_idx += 1
+            x = env[op.temp]
+            env[op.results[0]] = jnp.where(mask != 0, x, jnp.zeros_like(x))
+        elif isinstance(op, stencil.FusedYieldOp):
+            return [env[o] for o in op.operands]
+        else:  # pragma: no cover - FusedEpochOp.verify_ rejects these
+            raise NotImplementedError(f"fused region op {op.name}")
+    raise AssertionError("fused_epoch region missing stencil.fused_yield")
+
+
+def _rel_bounds(b: stencil.Bounds, core: stencil.Bounds, tile: tuple):
+    """Tile-relative bounds: where value ``b`` sits around one core tile.
+    The window a tile reads/computes of ``b`` is the tile grown by the
+    value's overhang beyond the core: shape = tile + (b.shape - core.shape),
+    starting ``core.lb - b.lb`` before the tile origin."""
+    return stencil.Bounds(
+        tuple(bl - cl for bl, cl in zip(b.lb, core.lb)),
+        tuple(t + (bu - cu) for t, bu, cu in zip(tile, b.ub, core.ub)),
+    )
+
+
+def _window_spec(window: tuple, index_map):
+    # overlapping element-indexed windows: newer jax spells this
+    # pl.Element block dims, older jax an Unblocked indexing mode
+    if hasattr(pl, "Element"):
+        return pl.BlockSpec(tuple(pl.Element(w) for w in window), index_map)
+    return pl.BlockSpec(window, index_map, indexing_mode=pl.unblocked)
+
+
+def build_epoch_kernel(
+    fused_op: stencil.FusedEpochOp,
+    mask_shapes: Sequence[tuple],
+    tile: Optional[tuple] = None,
+    interpret: bool = True,
+):
+    """Code-generate one pallas_call for a whole fused epoch.
+
+    Returns a callable taking ``(*external_arrays, *mask_arrays)`` (the
+    op's operands in order, then one 0/1 keep-mask per boundary_mask op in
+    region order) and returning the escape arrays (the op's results)."""
+    mask_ops = [
+        op for op in fused_op.body.ops if isinstance(op, comm.BoundaryMaskOp)
+    ]
+    assert len(mask_shapes) == len(mask_ops)
+    n_in = len(fused_op.operands)
+    n_mask = len(mask_ops)
+    escape_bounds = [r.type.bounds for r in fused_op.results]
+
+    core = escape_bounds[0] if escape_bounds else None
+    tiled_ok = (
+        core is not None
+        and all(b == core for b in escape_bounds)
+        and not _uses_index(fused_op)  # stencil.index needs logical coords
+    )
+    if tiled_ok:
+        # VMEM working set: every region value's window (externals carry
+        # the accumulated epoch halo; intermediates the shrinking frames)
+        spans = [
+            (
+                tuple(vl - cl for vl, cl in zip(v.type.bounds.lb, core.lb)),
+                tuple(vu - cu for vu, cu in zip(v.type.bounds.ub, core.ub)),
+            )
+            for v in _region_values(fused_op)
+            if isinstance(v.type, stencil.TempType)
+        ]
+        if tile is None:
+            tile = choose_tile(core.shape, spans)
+        tile = tuple(tile)
+        if len(tile) != core.rank or any(
+            t < 1 or s % t for s, t in zip(core.shape, tile)
+        ):
+            tiled_ok = False  # fall back rather than mis-tile an epoch
+        elif tile == tuple(core.shape):
+            tiled_ok = False  # one tile == whole shard: skip the windows
+
+    if not tiled_ok:
+        # -- whole-shard mode: grid-free, refs are the full arrays ------
+        def bounds_of(v):
+            return v.type.bounds
+
+        def kernel(*refs):
+            inputs = [r[...] for r in refs[:n_in]]
+            masks = [r[...] for r in refs[n_in : n_in + n_mask]]
+            outs = _emit_region(fused_op, inputs, masks, bounds_of)
+            for o_ref, val in zip(refs[n_in + n_mask :], outs):
+                o_ref[...] = val
+
+        out_shape = [
+            jax.ShapeDtypeStruct(b.shape, jnp.float32) for b in escape_bounds
+        ]
+        return pl.pallas_call(
+            kernel,
+            out_shape=out_shape if len(out_shape) > 1 else out_shape[0],
+            interpret=interpret,
+        )
+
+    # -- tiled mode: grid over core, overlapping epoch-halo windows -----
+    grid = tuple(s // t for s, t in zip(core.shape, tile))
+    rel = {
+        v: _rel_bounds(v.type.bounds, core, tile)
+        for v in _region_values(fused_op)
+        if isinstance(v.type, stencil.TempType)
+    }
+
+    def tile_origin(*ids):
+        return tuple(i * t for i, t in zip(ids, tile))
+
+    in_specs = [
+        _window_spec(rel[arg].shape, tile_origin) for arg in fused_op.body.args
+    ] + [
+        _window_spec(rel[m.results[0]].shape, tile_origin) for m in mask_ops
+    ]
+    out_specs = [pl.BlockSpec(tile, lambda *ids: ids) for _ in escape_bounds]
+    out_shape = [
+        jax.ShapeDtypeStruct(core.shape, jnp.float32) for _ in escape_bounds
+    ]
+
+    def kernel(*refs):
+        inputs = [r[...] for r in refs[:n_in]]
+        masks = [r[...] for r in refs[n_in : n_in + n_mask]]
+        # escapes all have bounds == core, so rel(escape) == [0, tile):
+        # each yielded value IS exactly this tile's output block
+        outs = _emit_region(fused_op, inputs, masks, lambda v: rel[v])
+        for o_ref, val in zip(refs[n_in + n_mask :], outs):
+            o_ref[...] = val
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+        out_shape=out_shape if len(out_shape) > 1 else out_shape[0],
+        interpret=interpret,
+    )
+
+
+def run_epoch_pallas(
+    fused_op: stencil.FusedEpochOp,
+    arrays: Sequence,
+    masks: Sequence,
+    tile: Optional[tuple] = None,
+    interpret: bool = True,
+) -> list:
+    """Entry point used by the lowering's pallas backend: one traced
+    pallas_call per fused epoch (counted in ``kernels.dispatch_stats``)."""
+    if not fused_op.results:
+        return []
+    call = build_epoch_kernel(
+        fused_op,
+        [tuple(m.shape) for m in masks],
+        tile=tile,
+        interpret=interpret,
+    )
+    _DISPATCH.fused_epoch_calls += 1
+    out = call(
+        *[a.astype(jnp.float32) for a in arrays],
+        *[m.astype(jnp.float32) for m in masks],
+    )
+    return list(out) if isinstance(out, (tuple, list)) else [out]

@@ -3,11 +3,17 @@
 Each op takes halo-inclusive inputs and returns the core, mirroring the
 post-swap calling convention of the lowering (halos are filled by dmp/comm
 upstream).
+
+``interpret`` defaults to ``None`` — resolved through the same
+:func:`repro.kernels.default_interpret` the compile surface uses for
+``Target.pallas_interpret``, so ops-level callers and compiled programs
+agree on one flag source (interpret on CPU hosts, native Pallas on
+GPU/TPU, ``REPRO_PALLAS_INTERPRET`` overriding both).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +22,7 @@ from repro.core import ir
 from repro.core.builder import build_apply
 from repro.core.dialects import stencil
 from repro.core.fd import laplacian_star, radius
+from repro.kernels import default_interpret
 from repro.kernels.stencil_apply import run_apply_pallas
 
 
@@ -46,9 +53,11 @@ def star_stencil(
     coeffs: Dict[Tuple[int, ...], float],
     halo: Tuple[int, ...],
     tile=None,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """Apply a star/box stencil with static coefficients via Pallas."""
+    if interpret is None:
+        interpret = default_interpret()
     core = tuple(s - 2 * h for s, h in zip(x.shape, halo))
     apply_op, ob = _star_apply_ir(coeffs, core, halo)
     rb = stencil.Bounds.from_shape(core)
@@ -59,14 +68,16 @@ def star_stencil(
 
 
 @partial(jax.jit, static_argnames=("order", "halo", "interpret"))
-def laplacian(x, order: int = 2, halo: int = None, interpret: bool = True):  # type: ignore[assignment]
+def laplacian(
+    x, order: int = 2, halo: int = None, interpret: Optional[bool] = None  # type: ignore[assignment]
+):
     h = halo if halo is not None else radius(order)
     star = laplacian_star(x.ndim, order)
     return star_stencil(x, star, (h,) * x.ndim, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("alpha", "order", "interpret"))
-def heat_step(u, alpha: float, order: int = 2, interpret: bool = True):
+def heat_step(u, alpha: float, order: int = 2, interpret: Optional[bool] = None):
     """Fused u + alpha∇²u (one kernel, one VMEM round-trip)."""
     h = radius(order)
     star = dict(laplacian_star(u.ndim, order))
@@ -76,7 +87,9 @@ def heat_step(u, alpha: float, order: int = 2, interpret: bool = True):
     return star_stencil(u, star, (h,) * u.ndim, interpret=interpret)
 
 
-def wave_step(u_t, u_tm1_core, c2dt2: float, order: int = 2, interpret: bool = True):
+def wave_step(
+    u_t, u_tm1_core, c2dt2: float, order: int = 2, interpret: Optional[bool] = None
+):
     """2 u_t - u_{t-1} + c²dt² ∇²u_t; u_t halo-inclusive, u_{t-1} core."""
     h = radius(order)
     star = {k: c2dt2 * v for k, v in laplacian_star(u_t.ndim, order).items()}

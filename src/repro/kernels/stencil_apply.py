@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.dialects import stencil
+from repro.kernels import _DISPATCH
 
 
 VMEM_BUDGET_BYTES = 4 * 1024 * 1024  # per-operand working-set target
@@ -172,7 +173,8 @@ def run_apply_pallas(
     tile: Optional[tuple] = None,
     interpret: bool = True,
 ) -> list:
-    """Entry point used by the lowering's pallas backend."""
+    """Entry point used by the lowering's pallas backend.  Each call is
+    one traced pallas_call (counted in ``kernels.dispatch_stats``)."""
     call = build_apply_kernel(
         apply_op,
         [tuple(a.shape) for a in arrays],
@@ -181,5 +183,6 @@ def run_apply_pallas(
         tile=tile,
         interpret=interpret,
     )
+    _DISPATCH.apply_calls += 1
     out = call(*[a.astype(jnp.float32) for a in arrays])
     return list(out) if isinstance(out, (tuple, list)) else [out]

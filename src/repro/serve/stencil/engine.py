@@ -22,8 +22,9 @@ slot pool of ``serve/engine.py`` onto the PR 3 compile surface:
   at a ``frame_every`` cadence via callback or pull iterator
   (``request.py``), snapshots taken at epoch boundaries;
 - **metrics** — per-step utilization (live/pool), batched-vs-solo
-  dispatch counts, compile-cache hit deltas and per-fingerprint queue
-  depth (``metrics.py``).
+  dispatch counts, compile-cache hit deltas, per-fingerprint queue
+  depth, and per-fingerprint dispatch latency (p50/p99 wall time per
+  epoch dispatch — ``metrics.py``).
 
 Distributed targets (``target.distributed``) are served too, but solo:
 one ``shard_map``-ed call per live slot (vmapping over a mesh-spanning
@@ -38,6 +39,7 @@ slot-local, so XLA executes identical per-slot op sequences.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -162,15 +164,24 @@ class StencilEngine:
             live_at_dispatch += len(live)
             if not live:
                 continue
+            bucket = f"{group.key[0]}/{group.key[1]}"
             if group.compiled.target.distributed:
                 for slot, _ in live:
+                    t0 = time.perf_counter()
                     outs = group.compiled.step()(*group.read_slot(slot))
                     outs = outs if isinstance(outs, tuple) else (outs,)
+                    jax.block_until_ready(outs)
+                    self.metrics.record_dispatch(
+                        bucket, time.perf_counter() - t0
+                    )
                     group.rotate_slot(slot, outs)
                     solo += 1
             else:
+                t0 = time.perf_counter()
                 outs = self._pool_fn(group)(*group.state)
                 outs = outs if isinstance(outs, tuple) else (outs,)
+                jax.block_until_ready(outs)
+                self.metrics.record_dispatch(bucket, time.perf_counter() - t0)
                 group.rotate(outs)
                 if len(live) >= 2:
                     batched += 1

@@ -6,6 +6,13 @@ pool size, batched vs solo dispatch counts, per-fingerprint queue depth);
 cache counters (``repro.api.cache_stats``) as deltas since the engine was
 constructed, so a serving process can see exactly how many compiles its
 traffic caused vs reused.
+
+Dispatch *latency* is tracked per fingerprint bucket too: every timed
+dispatch records wall seconds under its "program_fp/target_fp" key (the
+same keys ``queue_depth`` uses), and ``step_latency()`` summarizes each
+bucket as p50/p99/mean — so a ``fused_epoch=True`` target's one-kernel
+epoch is directly comparable against its unfused sibling in the same
+``serve_load.json`` snapshot.
 """
 from __future__ import annotations
 
@@ -47,6 +54,9 @@ class EngineMetrics:
         self.requests_completed = 0
         self.frames_emitted = 0
         self.steps_advanced = 0
+        # "program_fp/target_fp" -> bounded deque of dispatch wall seconds
+        self.step_seconds: dict = {}
+        self._latency_limit = int(history_limit)
         stats = api.cache_stats()
         self._cache_baseline = stats.as_dict()
 
@@ -56,6 +66,15 @@ class EngineMetrics:
         self.batched_dispatches += step.batched_dispatches
         self.solo_dispatches += step.solo_dispatches
         self.steps_advanced += step.steps_advanced
+
+    def record_dispatch(self, key: str, seconds: float) -> None:
+        """One timed dispatch (batched or solo) for the fingerprint
+        bucket ``key`` ("program_fp/target_fp"); the per-bucket window is
+        bounded like the step history."""
+        times = self.step_seconds.get(key)
+        if times is None:
+            times = self.step_seconds[key] = deque(maxlen=self._latency_limit)
+        times.append(float(seconds))
 
     # -- reporting -------------------------------------------------------
     @property
@@ -68,6 +87,24 @@ class EngineMetrics:
         if not rows:
             return 0.0
         return sum(m.utilization for m in rows) / len(rows)
+
+    def step_latency(self) -> dict:
+        """Per-fingerprint dispatch latency: key ->
+        {"count", "mean_s", "p50_s", "p99_s"} over the recorded window.
+        One dispatch advances a whole epoch (``exchange_every`` time
+        steps) for every live slot in the bucket."""
+        out = {}
+        for key, times in self.step_seconds.items():
+            if not times:
+                continue
+            ordered = sorted(times)
+            out[key] = {
+                "count": len(ordered),
+                "mean_s": sum(ordered) / len(ordered),
+                "p50_s": _quantile(ordered, 0.50),
+                "p99_s": _quantile(ordered, 0.99),
+            }
+        return out
 
     def compile_cache(self) -> dict:
         """Process-wide compile-cache counters as deltas since this
@@ -91,4 +128,16 @@ class EngineMetrics:
             "mean_utilization": self.mean_utilization(),
             "compile_cache": self.compile_cache(),
             "queue_depth": dict(last.queue_depth) if last else {},
+            "step_latency": self.step_latency(),
         }
+
+
+def _quantile(ordered: list, q: float) -> float:
+    """Linear-interpolated quantile of a pre-sorted non-empty list."""
+    if len(ordered) == 1:
+        return ordered[0]
+    pos = q * (len(ordered) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(ordered) - 1)
+    frac = pos - lo
+    return ordered[lo] * (1.0 - frac) + ordered[hi] * frac

@@ -28,7 +28,10 @@ import tempfile
 import time
 from typing import Optional, Sequence
 
-SCHEMA_VERSION = 1
+# 2: Target grew the fused_epoch axis and pallas_interpret became a
+# real-device knob (both are now part of the stored target dict); v1
+# entries read as misses rather than resurrecting as unfused winners.
+SCHEMA_VERSION = 2
 
 
 class TuneCacheError(ValueError):
@@ -136,6 +139,7 @@ def target_to_dict(target) -> dict:
         "overlap": target.overlap,
         "diagonal": target.diagonal,
         "exchange_every": target.exchange_every,
+        "fused_epoch": target.fused_epoch,
         "pallas_interpret": target.pallas_interpret,
         "pallas_tile": list(target.pallas_tile) if target.pallas_tile else None,
         "donate": target.donate,
@@ -201,6 +205,7 @@ def target_from_dict(d: dict, devices: Optional[Sequence] = None):
         overlap=bool(d.get("overlap", False)),
         diagonal=bool(d.get("diagonal", False)),
         exchange_every=int(d.get("exchange_every", 1)),
+        fused_epoch=bool(d.get("fused_epoch", False)),
         pallas_interpret=bool(d.get("pallas_interpret", True)),
         pallas_tile=tuple(tile) if tile else None,
         donate=bool(d.get("donate", False)),

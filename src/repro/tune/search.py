@@ -99,9 +99,16 @@ def _fmt(t: Optional[float]) -> str:
 def _group_representative(target):
     """The cheapest member of a candidate's cost group: same
     decomposition and overlap, jnp backend, no tile, one exchange per
-    step — the artifact whose roofline terms extrapolate the group."""
+    step, per-step dispatch — the artifact whose roofline terms
+    extrapolate the group (fused_epoch/pallas_interpret are pallas-only
+    knobs and must be cleared along with the backend)."""
     return dataclasses.replace(
-        target, backend="jnp", pallas_tile=None, exchange_every=1
+        target,
+        backend="jnp",
+        pallas_tile=None,
+        exchange_every=1,
+        fused_epoch=False,
+        pallas_interpret=None,
     )
 
 
@@ -180,6 +187,7 @@ def tune(
     backends: Sequence[str] = ("jnp", "pallas"),
     exchange_every: Sequence[int] = (1, 2, 4, 8),
     overlap: Sequence[bool] = (False, True),
+    fused_epoch: Sequence[bool] = (False, True),
     verbose: bool = False,
 ) -> TuneResult:
     """Search the ``Target`` space for ``program`` on this machine.
@@ -198,6 +206,7 @@ def tune(
         backends=sorted(backends),
         exchange_every=sorted(int(k) for k in exchange_every),
         overlap=sorted(bool(o) for o in overlap),
+        fused_epoch=sorted(bool(f) for f in fused_epoch),
         keep_quantile=float(keep_quantile),
         min_keep=int(min_keep),
         # measurement protocol changes the winner's fidelity: a
@@ -224,6 +233,7 @@ def tune(
         backends=backends,
         exchange_every=exchange_every,
         overlap=overlap,
+        fused_epoch=fused_epoch,
     )
     score_candidates(program, candidates)
     survivors = prune_candidates(

@@ -61,6 +61,10 @@ class Candidate:
         parts = [f"grid={grid}", f"backend={t.backend}", f"k={t.exchange_every}"]
         if t.overlap:
             parts.append("overlap")
+        if t.fused_epoch:
+            parts.append("fused")
+        if t.backend == "pallas" and not t.pallas_interpret:
+            parts.append("native")
         if t.pallas_tile:
             parts.append("tile=" + "x".join(str(x) for x in t.pallas_tile))
         return " ".join(parts)
@@ -227,6 +231,17 @@ def _local_shape(program, strategy) -> tuple:
 # --------------------------------------------------------------------------
 
 
+def pallas_interpret_candidates(devices: Sequence) -> list:
+    """Interpret-mode values the search varies for pallas candidates:
+    only the resolved default on CPU-only inventories (interpret — the
+    real-device path would crash), the *native* non-interpret path first
+    when the inventory has an accelerator (interpret mode on a GPU/TPU is
+    a debugging oracle, never a perf winner, so it is not enumerated)."""
+    if any(getattr(d, "platform", "cpu") in ("gpu", "tpu") for d in devices):
+        return [False]
+    return [None]  # resolves via kernels.default_interpret()
+
+
 def enumerate_candidates(
     program,
     devices: Optional[Sequence] = None,
@@ -235,11 +250,15 @@ def enumerate_candidates(
     exchange_every: Sequence[int] = (1, 2, 4, 8),
     overlap: Sequence[bool] = (False, True),
     pallas_tiles: bool = True,
+    fused_epoch: Sequence[bool] = (False, True),
 ) -> list:
     """The candidate list for ``program`` on ``devices`` (default: all),
     baseline first.  Simple configurations enumerate first (no overlap,
-    shallow epochs, jnp, no tile), so stable min-by-score tie-breaks
-    prefer the least exotic winner."""
+    shallow epochs, jnp, no tile, per-step dispatch), so stable
+    min-by-score tie-breaks prefer the least exotic winner.  Pallas
+    candidates additionally vary ``fused_epoch`` (one megakernel per
+    epoch) and — when the device inventory has an accelerator — run the
+    native non-interpret path (``pallas_interpret_candidates``)."""
     import jax
 
     from repro import api
@@ -266,6 +285,7 @@ def enumerate_candidates(
 
     seen = {baseline.fingerprint}
     out = [baseline]
+    interprets = pallas_interpret_candidates(devices)
     for strategy in strategy_candidates(program, n_ranks):
         mesh = mesh_for_strategy(strategy, devices)
         ks = exchange_every_candidates(program, strategy, exchange_every)
@@ -277,21 +297,38 @@ def enumerate_candidates(
         for ov in overlap:
             for k in ks:
                 for backend in backends:
+                    # fused_epoch / pallas_interpret only vary on the
+                    # pallas backend (they are inert — and fused_epoch
+                    # invalid — on jnp, and would only duplicate
+                    # fingerprint-identical candidates)
+                    pallas_axes = (
+                        [
+                            (fe, pi)
+                            for fe in fused_epoch
+                            for pi in interprets
+                            if not (fe and ov)  # fused ⊥ overlap
+                        ]
+                        if backend == "pallas"
+                        else [(False, None)]
+                    )
                     for tile in tiles if backend == "pallas" else [None]:
-                        try:
-                            t = api.Target(
-                                mesh=mesh,
-                                strategy=strategy,
-                                backend=backend,
-                                overlap=bool(ov),
-                                exchange_every=k,
-                                pallas_tile=tile,
-                            )
-                            api._validate_for_program(program, t)
-                        except api.TargetError:
-                            continue
-                        if t.fingerprint in seen:
-                            continue
-                        seen.add(t.fingerprint)
-                        out.append(Candidate(target=t))
+                        for fe, pi in pallas_axes:
+                            try:
+                                t = api.Target(
+                                    mesh=mesh,
+                                    strategy=strategy,
+                                    backend=backend,
+                                    overlap=bool(ov),
+                                    exchange_every=k,
+                                    fused_epoch=bool(fe),
+                                    pallas_interpret=pi,
+                                    pallas_tile=tile,
+                                )
+                                api._validate_for_program(program, t)
+                            except api.TargetError:
+                                continue
+                            if t.fingerprint in seen:
+                                continue
+                            seen.add(t.fingerprint)
+                            out.append(Candidate(target=t))
     return out

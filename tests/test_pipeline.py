@@ -384,6 +384,41 @@ def test_temporal_tile_via_spec_matches_flag_surface():
     assert ("temporal-tile", {"k": "4"}) in parsed
 
 
+def test_fuse_epoch_golden_sequence():
+    """fuse-epoch-kernel after lower-comm: the k=2 epoch's two applies
+    (and the zero-BC re-masking between them) collapse into exactly ONE
+    region-bearing stencil.fused_epoch op — the op the pallas backend
+    turns into a single kernel dispatch."""
+    fused = _tiled(
+        _jacobi_prog(),
+        "decompose,swap-elim,temporal-tile{k=2},lower-comm,fuse-epoch-kernel",
+        boundary="zero",
+    )
+    ir.verify_module(fused)
+    names = [op.name for op in fused.body.ops]
+    assert names.count("stencil.fused_epoch") == 1
+    assert "stencil.apply" not in names
+    assert "comm.boundary_mask" not in names
+    # comm stays outside the kernel: exchange before, store after
+    assert names.index("comm.wait") < names.index("stencil.fused_epoch")
+    assert names.index("stencil.fused_epoch") < names.index("stencil.store")
+    (fop,) = [
+        op for op in fused.body.ops
+        if isinstance(op, stencil.FusedEpochOp)
+    ]
+    inner = [op.name for op in fop.body.ops]
+    assert inner == [
+        "stencil.apply",
+        "comm.boundary_mask",
+        "stencil.apply",
+        "stencil.fused_yield",
+    ], inner
+    assert fop.k == 2
+    # the epoch's escape is the core-bounds step-2 result the store reads
+    (res,) = fop.results
+    assert res.type.bounds.shape == (16, 16)
+
+
 def test_pipeline_overlap_semantics_single_device():
     rng = np.random.default_rng(11)
     u0 = rng.standard_normal((24, 24)).astype(np.float32)

@@ -313,6 +313,31 @@ def test_engine_metrics_aggregate_and_cache_deltas():
     assert cache2["misses"] == 0 and cache2["hits"] >= 1
 
 
+def test_step_latency_reports_per_fingerprint_quantiles():
+    """Every dispatch is timed under its bucket's "program_fp/target_fp"
+    key: a fused-epoch target and its unfused sibling land in separate
+    buckets, each with p50/p99/mean over the recorded window — the
+    fused-vs-unfused win is visible straight from the snapshot."""
+    prog = _heat(name="heat_latency")
+    eng = StencilEngine(StencilEngineConfig(slots_per_group=2))
+    t_unfused = Target(backend="pallas", exchange_every=2, pallas_interpret=True)
+    t_fused = Target(
+        backend="pallas", exchange_every=2, fused_epoch=True,
+        pallas_interpret=True,
+    )
+    eng.submit(prog, (_rand((16, 16), 0),), n_steps=4, target=t_unfused)
+    eng.submit(prog, (_rand((16, 16), 1),), n_steps=4, target=t_fused)
+    eng.run()
+    lat = eng.metrics.snapshot()["step_latency"]
+    assert len(lat) == 2
+    for t in (t_unfused, t_fused):
+        key = f"{prog.fingerprint}/{t.fingerprint}"
+        stats = lat[key]
+        assert stats["count"] == 2  # 4 steps at k=2 → 2 epoch dispatches
+        assert 0.0 < stats["p50_s"] <= stats["p99_s"]
+        assert stats["mean_s"] > 0.0
+
+
 def test_queue_depth_reports_per_fingerprint():
     prog = _heat(name="heat_depth")
     eng = StencilEngine(StencilEngineConfig(slots_per_group=1))

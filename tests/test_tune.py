@@ -121,6 +121,39 @@ def test_enumerate_baseline_first_and_valid():
         api._validate_for_program(prog, c.target)
 
 
+def test_enumerate_emits_fused_epoch_candidates():
+    prog = _jacobi_prog()
+    cands = enumerate_candidates(prog)
+    fused = [c for c in cands if c.target.fused_epoch]
+    assert fused, "no fused_epoch candidates offered"
+    for c in fused:
+        assert c.target.backend == "pallas"
+        assert not c.target.overlap  # fused ⊥ overlap
+        assert "fused" in c.describe()
+    # the axis can be switched off
+    none_fused = enumerate_candidates(prog, fused_epoch=(False,))
+    assert not any(c.target.fused_epoch for c in none_fused)
+
+
+def test_enumerate_interpret_follows_inventory():
+    import jax
+
+    from repro.tune.space import pallas_interpret_candidates
+
+    # CPU-only inventory (the CI machine): interpret resolves to the
+    # default; an accelerator inventory would enumerate the native path
+    devs = jax.devices()
+    if any(d.platform in ("gpu", "tpu") for d in devs):
+        assert pallas_interpret_candidates(devs) == [False]
+    else:
+        assert pallas_interpret_candidates(devs) == [None]
+
+    class _FakeGPU:
+        platform = "gpu"
+
+    assert pallas_interpret_candidates([_FakeGPU()]) == [False]
+
+
 # -------------------------------------------------------------------------
 # cost-model-only tuning + the persistent cache (acceptance)
 # -------------------------------------------------------------------------
@@ -236,6 +269,22 @@ def test_target_dict_roundtrip_fingerprint():
     back = target_from_dict(d)
     assert back.fingerprint == t.fingerprint == d["fingerprint"]
     assert back.pallas_tile == (8, 16) and back.exchange_every == 2
+
+
+def test_target_dict_roundtrips_fused_epoch():
+    t = Target(backend="pallas", exchange_every=4, fused_epoch=True,
+               pallas_interpret=True)
+    d = target_to_dict(t)
+    assert d["fused_epoch"] is True and d["pallas_interpret"] is True
+    back = target_from_dict(d)
+    assert back.fused_epoch and back.fingerprint == t.fingerprint
+    # a pre-fused_epoch (schema v1) winner dict rebuilt under v2 defaults
+    # to unfused rather than erroring
+    legacy = {k: v for k, v in d.items()
+              if k not in ("fused_epoch", "pallas_interpret")}
+    old = target_from_dict(legacy)
+    assert not old.fused_epoch
+    assert old.fingerprint != t.fingerprint
 
 
 def test_cache_schema_and_corruption_are_misses(tune_dir):
