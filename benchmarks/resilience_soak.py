@@ -1,0 +1,161 @@
+"""Fault-injected soak: checkpoint overhead and time-to-recover.
+
+The resilience layer's two costs, measured on the fig7 heat kernel:
+
+1. **checkpoint overhead** — per-step wall time of a ``ResilientLoop``
+   with no checkpointing (the epoch-driver baseline) vs checkpointing
+   every epoch, blocking and async.  Reported as seconds/step and as
+   overhead % over the no-checkpoint driver — the number a user trades
+   against their preemption rate when picking ``checkpoint_every``.
+2. **time-to-recover** — a ``FaultPlan`` kills the run mid-soak; the
+   wall time of ``resume()`` (manifest verify + restore + recompile)
+   plus the first post-resume epoch is the recovery latency.  The
+   resumed run's final state is spot-checked bitwise against the
+   uninterrupted reference, so the numbers describe a *correct*
+   recovery.
+
+Writes ``results/bench/resilience_soak.json``.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import save_record, table, target_record
+
+
+def _heat_program(shape):
+    from repro.frontends.oec_like import ProgramBuilder
+
+    p = ProgramBuilder("heat_soak", shape)
+    u = p.input("u")
+    out = p.output("out")
+    t = p.load(u)
+    r = p.apply(
+        [t],
+        lambda b, u: (u.at(-1, 0) + u.at(1, 0) + u.at(0, -1) + u.at(0, 1))
+        * 0.25,
+    )
+    p.store(r, out)
+    return p.finish(boundary="periodic")
+
+
+def _run_loop(prog, target, u0, n_steps, **kwargs):
+    """One ResilientLoop soak; returns (final state, wall seconds)."""
+    import jax
+
+    from repro.resilience import ResilientLoop
+
+    loop = ResilientLoop(prog, target, (u0,), n_steps, **kwargs)
+    t0 = time.perf_counter()
+    final = loop.run()
+    jax.block_until_ready(final)
+    return final, time.perf_counter() - t0
+
+
+def run(fast: bool = False) -> dict:
+    from repro.api import Target
+    from repro.resilience import FaultPlan, SimulatedFault, resume
+
+    shape = (128, 128) if fast else (256, 256)
+    n_steps = 64 if fast else 256
+    k = 4
+    target = Target(exchange_every=k)
+    prog = _heat_program(shape)
+    u0 = np.random.default_rng(0).standard_normal(shape).astype(np.float32)
+
+    root = tempfile.mkdtemp(prefix="repro-soak-")
+    rows = []
+    record: dict = {
+        "shape": list(shape),
+        "n_steps": n_steps,
+        "target": target_record(target),
+        "variants": {},
+    }
+    try:
+        # warm the compile cache so the baseline is not paying the trace
+        ref, _ = _run_loop(prog, target, u0, n_steps, checkpoint_every=0)
+        baseline = None
+        variants = [
+            ("no-checkpoint", dict(checkpoint_every=0)),
+            ("blocking-every-epoch", dict(checkpoint_every=1)),
+            ("async-every-epoch", dict(checkpoint_every=1, async_saves=True)),
+            ("blocking-every-4-epochs", dict(checkpoint_every=4)),
+        ]
+        for name, kw in variants:
+            d = os.path.join(root, name)
+            if kw.get("checkpoint_every"):
+                kw = dict(kw, directory=d)
+            final, secs = _run_loop(prog, target, u0, n_steps, **kw)
+            assert all(
+                np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(final, ref)
+            ), f"variant {name} is not bitwise vs the baseline"
+            per_step = secs / n_steps
+            overhead = (
+                0.0 if baseline is None else (per_step / baseline - 1.0) * 100
+            )
+            if baseline is None:
+                baseline = per_step
+            record["variants"][name] = {
+                "seconds_per_step": per_step,
+                "overhead_pct": overhead,
+            }
+            rows.append((name, f"{per_step * 1e6:.1f}µs", f"{overhead:+.1f}%"))
+
+        # --- time-to-recover -------------------------------------------
+        kill_epoch = (n_steps // k) // 2
+        d = os.path.join(root, "killed")
+        try:
+            _run_loop(
+                prog, target, u0, n_steps, directory=d, checkpoint_every=1,
+                fault_plan=FaultPlan(kill_at_epoch=kill_epoch),
+            )
+            raise RuntimeError("FaultPlan did not fire")
+        except SimulatedFault:
+            pass
+        t0 = time.perf_counter()
+        loop = resume(prog, d, target)
+        restore_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        loop.advance_epoch()  # first post-resume epoch (compile + run)
+        first_epoch_s = time.perf_counter() - t0
+        final = loop.run()
+        assert all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(final, ref)
+        ), "resumed run is not bitwise vs the uninterrupted reference"
+        record["recovery"] = {
+            "killed_at_step": kill_epoch * k,
+            "restore_seconds": restore_s,
+            "first_epoch_seconds": first_epoch_s,
+            "time_to_recover_seconds": restore_s + first_epoch_s,
+            "bitwise_ok": True,
+        }
+        rows.append(
+            (
+                "time-to-recover",
+                f"{(restore_s + first_epoch_s) * 1e3:.1f}ms",
+                f"(restore {restore_s * 1e3:.1f}ms)",
+            )
+        )
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    print(
+        table(
+            f"resilience soak  {shape[0]}x{shape[1]}, {n_steps} steps, k={k}",
+            rows,
+            ["variant", "per-step / total", "overhead"],
+        )
+    )
+    save_record("resilience_soak", record)
+    return record
+
+
+if __name__ == "__main__":
+    run(fast=True)

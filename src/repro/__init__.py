@@ -12,6 +12,7 @@ API is touched).
 __all__ = [
     "api",
     "tune",
+    "resilience",
     "Program",
     "Target",
     "TargetError",
@@ -19,6 +20,8 @@ __all__ = [
     "compile",
     "cache_stats",
     "clear_cache",
+    "resilient_loop",
+    "resume",
 ]
 
 
@@ -27,6 +30,10 @@ def __getattr__(name: str):
         import repro.tune as tune
 
         return tune
+    if name == "resilience":
+        import repro.resilience as resilience
+
+        return resilience
     if name in __all__:
         import repro.api as api
 

@@ -455,6 +455,16 @@ class CompiledStencil:
             i for i in range(len(self.program.field_args)) if i not in outs
         )
 
+    @property
+    def ret_indices(self) -> tuple:
+        """Field-arg positions of the values one call RETURNS (first-store
+        order of the local IR).  Equals the program's stored fields except
+        for epoched carried-state programs (wave, p > q), whose epochs
+        also hand back the rotated-through intermediate buffers.  The
+        resilience driver records this in checkpoint manifests — the
+        rotation arithmetic of a resumed run must match the killed one."""
+        return self._ret_indices
+
     def step(self, dtype=None) -> Callable:
         """A step over the *input* fields only: output buffers (fully
         overwritten every call) are allocated internally — the shape
@@ -475,23 +485,41 @@ class CompiledStencil:
 
         return fn
 
+    def epochs(self, n_steps: int) -> int:
+        """``n_steps`` time steps as a whole number of epochs of this
+        artifact — the shared validation for every driver (``time_loop``,
+        ``repro.resilience``, the serve engine's admission check): a
+        depth-k artifact advances k steps per call, so ``n_steps`` must
+        divide evenly (a partial epoch has no compiled form)."""
+        k = self.target.exchange_every
+        if n_steps % k != 0:
+            raise ValueError(
+                f"n_steps={n_steps} with "
+                f"Target(exchange_every={k}): n_steps must be a multiple of "
+                f"the epoch depth (each call advances {k} steps)"
+            )
+        return n_steps // k
+
+    def advance(self, state: Sequence[Any]) -> tuple:
+        """One epoch with time-buffer rotation applied: consume ``state``
+        (oldest → newest), return the rotated state after ``exchange_every``
+        time steps — exactly one iteration of ``time_loop``'s body, exposed
+        so epoch-granular drivers (``repro.resilience.ResilientLoop``, the
+        serve engine) and the fori-loop driver share one rotation rule."""
+        outs = self.step()(*state)
+        outs = outs if isinstance(outs, tuple) else (outs,)
+        return tuple(state[len(outs):]) + tuple(outs)
+
     def time_loop(self, state: Sequence[Any], n_steps: int, unroll: int = 1):
         """Iterate ``n_steps`` *time steps* with time-buffer rotation
         (``state`` ordered oldest→newest) under one ``lax.fori_loop``.
 
         ``n_steps`` always counts single time steps regardless of the
-        target's ``exchange_every``: a depth-k artifact advances k steps
-        per call, so the loop runs ``n_steps // k`` epochs (``n_steps``
-        must divide evenly — a partial epoch has no compiled form)."""
-        k = self.target.exchange_every
-        if k > 1 and n_steps % k != 0:
-            raise ValueError(
-                f"time_loop(n_steps={n_steps}) with "
-                f"Target(exchange_every={k}): n_steps must be a multiple of "
-                f"the epoch depth (each call advances {k} steps)"
-            )
+        target's ``exchange_every``: the loop runs ``self.epochs(n_steps)``
+        epochs.  For a checkpointable / fault-tolerant loop with the same
+        arithmetic, see ``repro.resilience.ResilientLoop``."""
         return time_loop(
-            self.step(), tuple(state), n_steps // k, unroll=unroll
+            self.step(), tuple(state), self.epochs(n_steps), unroll=unroll
         )
 
     # -- inspection ------------------------------------------------------
@@ -1019,3 +1047,27 @@ def time_loop(
         return tuple(s[len(outs):]) + outs
 
     return jax.lax.fori_loop(0, n_steps, body, state, unroll=unroll)
+
+
+# --------------------------------------------------------------------------
+# Resilience entry points (repro.resilience)
+# --------------------------------------------------------------------------
+
+
+def resilient_loop(program, target=None, state=(), n_steps=0, **kwargs):
+    """A checkpointing, fault-tolerant ``time_loop``: epoch-aligned
+    snapshots every ``checkpoint_every`` epochs, killable and resumable —
+    see ``repro.resilience.ResilientLoop``."""
+    from repro.resilience import ResilientLoop
+
+    return ResilientLoop(program, target, state, n_steps, **kwargs)
+
+
+def resume(program, directory: str, target=None, **kwargs):
+    """Resume a checkpointed run from ``directory`` onto ``target`` — a
+    *different* mesh factorization / rank count is allowed: the restored
+    host arrays are resharded through ``dist/sharding`` and the program
+    recompiled.  See ``repro.resilience.resume``."""
+    from repro.resilience import resume as _resume
+
+    return _resume(program, directory, target, **kwargs)

@@ -1,7 +1,11 @@
 """Sharded checkpointing with manifest + async writes + elastic restore.
 
 Layout:  <dir>/step_<n>/
-            manifest.json           — tree structure, shapes, dtypes
+            manifest.json           — tree structure, shapes, dtypes,
+                                      plus caller-provided ``extra``
+                                      metadata (the resilience driver
+                                      records program fingerprint, step,
+                                      rotation phase, ret_indices here)
             <leaf-key>.npy          — one file per leaf
             COMMITTED               — written last; partial checkpoints
                                       (preemption mid-write) are ignored
@@ -11,9 +15,17 @@ with the *target* sharding — the saved mesh and the restore mesh are
 independent, so a run checkpointed on 512 chips restores onto 256 (or a
 CPU smoke test) unchanged.  Async saves run on a daemon thread; ``wait``
 joins before the next save or shutdown.
+
+Retention and crash hygiene: after each successful COMMITTED save, the
+``keep_last`` newest committed snapshots are retained and older ones
+pruned; construction garbage-collects leftovers of preempted writers —
+``step_*.tmp`` staging dirs and uncommitted ``step_*`` dirs.  The
+per-instance ``stats`` counters (saves / prunes / gcs) are truthful:
+a prune is a committed snapshot aged out, a gc is a partial dir removed.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import re
@@ -42,18 +54,67 @@ def _path_token(p) -> str:
     return str(p)
 
 
+@dataclasses.dataclass
+class CheckpointStats:
+    """Per-Checkpointer counters: committed saves, retention prunes of
+    committed snapshots, and startup garbage collections of partial
+    (uncommitted / staging) directories."""
+
+    saves: int = 0
+    prunes: int = 0
+    gcs: int = 0
+
+    def as_dict(self) -> dict:
+        return {"saves": self.saves, "prunes": self.prunes, "gcs": self.gcs}
+
+
 class Checkpointer:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(
+        self,
+        directory: str,
+        keep: int = 3,
+        keep_last: Optional[int] = None,
+    ):
         self.dir = directory
-        self.keep = keep
+        # ``keep_last`` is the canonical retention knob; ``keep`` remains
+        # as the original spelling (same meaning) for existing callers
+        self.keep = int(keep_last if keep_last is not None else keep)
+        if self.keep < 1:
+            raise ValueError(f"keep_last must be >= 1, got {self.keep}")
+        self.stats = CheckpointStats()
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._startup_gc()
+
+    def _startup_gc(self) -> None:
+        """Remove leftovers of a preempted writer: ``step_*.tmp`` staging
+        dirs and ``step_*`` dirs missing their COMMITTED marker.  A torn
+        write is already *invisible* to restore; this reclaims its disk
+        and keeps the directory listing honest."""
+        for name in os.listdir(self.dir):
+            path = os.path.join(self.dir, name)
+            if re.fullmatch(r"step_\d+\.tmp", name):
+                shutil.rmtree(path, ignore_errors=True)
+                self.stats.gcs += 1
+            elif re.fullmatch(r"step_\d+", name) and not os.path.exists(
+                os.path.join(path, "COMMITTED")
+            ):
+                shutil.rmtree(path, ignore_errors=True)
+                self.stats.gcs += 1
 
     # -- save ------------------------------------------------------------
-    def save(self, step: int, tree, blocking: bool = False) -> None:
+    def save(
+        self,
+        step: int,
+        tree,
+        blocking: bool = False,
+        extra: Optional[dict] = None,
+    ) -> None:
+        """Snapshot ``tree`` as ``step``.  ``extra`` is a JSON-able dict
+        merged into the manifest under ``"extra"`` — metadata a resumer
+        needs but that is not an array leaf."""
         self.wait()
         host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-        structure = jax.tree_util.tree_structure(tree)
 
         def write():
             path = os.path.join(self.dir, f"step_{step:08d}")
@@ -61,7 +122,9 @@ class Checkpointer:
             shutil.rmtree(tmp, ignore_errors=True)
             os.makedirs(tmp, exist_ok=True)
             flat = _flatten(host)
-            manifest = {"step": step, "leaves": {}}
+            manifest: dict = {"step": step, "leaves": {}}
+            if extra is not None:
+                manifest["extra"] = extra
             for key, leaf in flat.items():
                 fname = key.replace("/", "__") + ".npy"
                 np.save(os.path.join(tmp, fname), leaf)
@@ -76,6 +139,7 @@ class Checkpointer:
                 f.write("ok")
             shutil.rmtree(path, ignore_errors=True)
             os.rename(tmp, path)
+            self.stats.saves += 1
             self._gc()
 
         if blocking:
@@ -95,6 +159,7 @@ class Checkpointer:
             shutil.rmtree(
                 os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True
             )
+            self.stats.prunes += 1
 
     # -- restore ----------------------------------------------------------
     def available_steps(self) -> list:
@@ -108,6 +173,16 @@ class Checkpointer:
     def latest_step(self) -> Optional[int]:
         steps = self.available_steps()
         return steps[-1] if steps else None
+
+    def manifest(self, step: Optional[int] = None) -> dict:
+        """The manifest of ``step`` (default: latest committed) — leaf
+        metadata plus whatever ``extra`` the saver recorded."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)
 
     def restore(self, tree_like, step: Optional[int] = None, shardings=None):
         """Restore into the structure of ``tree_like``.

@@ -180,6 +180,25 @@ def shard_map(f, *, mesh: Mesh, in_specs, out_specs, check_vma: bool = False):
     )
 
 
+def reshard(arrays, mesh: Optional[Mesh], specs) -> tuple:
+    """Place host arrays onto ``mesh`` with one ``PartitionSpec`` each —
+    the elastic-restore path: state checkpointed under one mesh
+    factorization is ``device_put`` under a *different* one (or none),
+    so a killed 4-rank run resumes onto 2 ranks unchanged.  ``mesh`` is
+    ``None`` for a single-device restore (plain device_put)."""
+    arrays = tuple(arrays)
+    if mesh is None:
+        return tuple(jax.device_put(a) for a in arrays)
+    if len(arrays) != len(tuple(specs)):
+        raise ValueError(
+            f"{len(arrays)} arrays for {len(tuple(specs))} partition specs"
+        )
+    return tuple(
+        jax.device_put(a, NamedSharding(mesh, spec))
+        for a, spec in zip(arrays, specs)
+    )
+
+
 def shard(x, *logical: Optional[str]):
     """Constrain ``x`` to the active rules' layout for ``logical`` axes.
 

@@ -1,0 +1,42 @@
+"""repro.resilience — elastic, fault-tolerant time loops.
+
+Production multi-day stencil runs (Devito/PSyclone's deployment reality)
+survive preemption by checkpointing and resume *elastically* — possibly
+onto a different mesh factorization or rank count.  This package is that
+robustness layer over the PR 3 compile surface:
+
+    from repro.resilience import ResilientLoop, resume, FaultPlan
+
+    loop = ResilientLoop(program, target, (u0,), 256,
+                         directory="ckpt/", checkpoint_every=4)
+    final = loop.run()                       # snapshots every 4 epochs
+
+    # ... killed mid-run (preemption, or an injected FaultPlan) ...
+
+    loop = resume(program, "ckpt/", new_target)   # e.g. 4 ranks -> 2
+    final = loop.run()       # bitwise-equal to the uninterrupted run
+
+- ``driver.py``   — ``ResilientLoop`` / ``resume``: the epoch-aligned
+  checkpointing loop and the reshard-and-recompile resume path.
+- ``faults.py``   — ``FaultPlan`` / ``SimulatedFault``: deterministic
+  kill / straggler / torn-write injection for tests and the soak
+  benchmark.
+- ``migrate.py``  — ``evacuate`` / ``admit``: request migration between
+  stencil-serving engines (``StencilEngine.evacuate`` delegates here).
+
+Also reachable as ``repro.api.resilient_loop`` / ``repro.api.resume``.
+"""
+from repro.resilience.driver import ResilientLoop, ResumeError, resume
+from repro.resilience.faults import FaultPlan, SimulatedFault, truncate_snapshot
+from repro.resilience.migrate import admit, evacuate
+
+__all__ = [
+    "FaultPlan",
+    "ResilientLoop",
+    "ResumeError",
+    "SimulatedFault",
+    "admit",
+    "evacuate",
+    "resume",
+    "truncate_snapshot",
+]

@@ -98,6 +98,7 @@ class StencilEngine:
         frame_every: int = 0,
         on_frame: Optional[Callable] = None,
         tenant: Optional[str] = None,
+        start_step: int = 0,
     ) -> RequestHandle:
         """Enqueue one simulation job; returns a handle immediately.
 
@@ -106,7 +107,10 @@ class StencilEngine:
         time steps and must be a positive multiple of the target's
         ``exchange_every`` (one engine dispatch advances a whole epoch).
         ``frame_every`` > 0 streams a state snapshot at each epoch
-        boundary crossing a multiple of that cadence.
+        boundary crossing a multiple of that cadence.  ``start_step`` > 0
+        admits a *mid-run* request (the migration path: ``state`` is the
+        checkpointed state at that epoch-aligned step, and the engine
+        advances only the remaining ``n_steps - start_step`` steps).
         """
         target = target if target is not None else api.Target()
         compiled = api.compile(program, target)  # cache-keyed by fingerprints
@@ -118,6 +122,12 @@ class StencilEngine:
                 f"n_steps={n_steps} is not a multiple of the target's "
                 f"exchange_every={k}; the engine advances whole epochs, so "
                 "round the request up or pick a dividing epoch depth"
+            )
+        if not 0 <= start_step < n_steps or start_step % k != 0:
+            raise ValueError(
+                f"start_step={start_step} must be an epoch-aligned step "
+                f"(multiple of {k}) strictly below n_steps={n_steps}; a "
+                "migrated request resumes at the checkpointed step count"
             )
         if frame_every < 0:
             raise ValueError(f"frame_every must be >= 0, got {frame_every}")
@@ -145,6 +155,7 @@ class StencilEngine:
             on_frame=on_frame,
             tenant=tenant,
             submitted_at=now(),
+            steps_done=int(start_step),
         )
         self._next_rid += 1
         group = self.scheduler.group_for(compiled)
@@ -223,6 +234,26 @@ class StencilEngine:
     def pending(self) -> int:
         """Requests admitted or queued but not yet finished."""
         return self.scheduler.total_live + self.scheduler.total_queued
+
+    # -- migration (repro.resilience.migrate) ----------------------------
+    def evacuate(self, program_fingerprint: str, directory: str) -> list:
+        """Drain every request of ``program_fingerprint`` to epoch-aligned
+        checkpoints under ``directory`` and release their slots — the
+        serve layer's request-migration primitive: a second engine picks
+        them up mid-run with ``admit_evacuated``, and each request's
+        final state stays bitwise-equal to an unmigrated run."""
+        from repro.resilience.migrate import evacuate as _evacuate
+
+        return _evacuate(self, program_fingerprint, directory)
+
+    def admit_evacuated(self, directory: str, programs, target=None) -> list:
+        """Admit the requests another engine evacuated into ``directory``;
+        ``programs`` maps checkpoint fingerprints back to live ``Program``
+        objects, and ``target`` optionally re-targets every admitted
+        request (e.g. onto this engine's mesh).  Returns new handles."""
+        from repro.resilience.migrate import admit as _admit
+
+        return _admit(self, directory, programs, target=target)
 
     @property
     def utilization(self) -> float:

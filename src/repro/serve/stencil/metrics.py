@@ -52,6 +52,8 @@ class EngineMetrics:
         self.solo_dispatches = 0
         self.requests_submitted = 0
         self.requests_completed = 0
+        self.requests_evacuated = 0   # drained to checkpoints (migration out)
+        self.requests_resumed = 0     # admitted from checkpoints (migration in)
         self.frames_emitted = 0
         self.steps_advanced = 0
         # "program_fp/target_fp" -> bounded deque of dispatch wall seconds
@@ -121,6 +123,8 @@ class EngineMetrics:
             "engine_steps": self.engine_steps,
             "requests_submitted": self.requests_submitted,
             "requests_completed": self.requests_completed,
+            "requests_evacuated": self.requests_evacuated,
+            "requests_resumed": self.requests_resumed,
             "frames_emitted": self.frames_emitted,
             "steps_advanced": self.steps_advanced,
             "batched_dispatches": self.batched_dispatches,

@@ -17,10 +17,13 @@ from typing import Any, Callable, Iterator, Optional
 
 import numpy as np
 
-# request lifecycle: queued → running → done
+# request lifecycle: queued → running → done, with an exit ramp:
+# a request drained to a checkpoint by StencilEngine.evacuate (it no
+# longer occupies this engine; a second engine admits it mid-run)
 QUEUED = "queued"
 RUNNING = "running"
 DONE = "done"
+EVACUATED = "evacuated"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -118,7 +118,14 @@ class Scheduler:
             req.slot = slot
             req.status = RUNNING
             req.started_at = now()
-            req.next_frame_at = req.frame_every if req.frame_every else 0
+            # next cadence mark strictly after the steps already done —
+            # a migrated request (steps_done > 0 at admission) continues
+            # its frame schedule instead of restarting it
+            req.next_frame_at = (
+                req.frame_every * (req.steps_done // req.frame_every + 1)
+                if req.frame_every
+                else 0
+            )
             group.write_slot(slot, req.state)
             group.active[slot] = req
             admitted.append(req)

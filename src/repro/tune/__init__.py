@@ -25,6 +25,7 @@ from repro.tune.cache import (
     cache_dir,
     cache_stats,
     hardware_signature,
+    lookup_transfer,
     reset_cache_stats,
     target_from_dict,
     target_to_dict,
@@ -41,6 +42,7 @@ __all__ = [
     "cache_stats",
     "enumerate_candidates",
     "hardware_signature",
+    "lookup_transfer",
     "measure_compiled",
     "prune_candidates",
     "reset_cache_stats",

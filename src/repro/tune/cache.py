@@ -56,9 +56,18 @@ class TuneCacheStats:
     hits: int = 0
     misses: int = 0
     stores: int = 0
+    # cross-hardware warm starts (``lookup_transfer``) — counted apart
+    # from ``hits`` because a transferred winner was tuned on DIFFERENT
+    # hardware: it is a good starting point, not a verified local fact
+    transfer_hits: int = 0
 
     def as_dict(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses, "stores": self.stores}
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "stores": self.stores,
+            "transfer_hits": self.transfer_hits,
+        }
 
 
 _STATS = TuneCacheStats()
@@ -73,6 +82,7 @@ def reset_cache_stats() -> None:
     _STATS.hits = 0
     _STATS.misses = 0
     _STATS.stores = 0
+    _STATS.transfer_hits = 0
 
 
 # --------------------------------------------------------------------------
@@ -242,6 +252,76 @@ def demote_hit_to_miss() -> None:
     report what actually happened: the search ran."""
     _STATS.hits -= 1
     _STATS.misses += 1
+
+
+def lookup_transfer(
+    program,
+    n_ranks: int,
+    options: str,
+    devices: Optional[Sequence] = None,
+) -> Optional[tuple]:
+    """Cross-hardware warm start: the newest entry tuned for the SAME
+    program and search options under a DIFFERENT hardware signature,
+    whose winner still rebuilds and validates here.
+
+    Returns ``(entry, target)`` or ``None``.  A success counts as a
+    ``transfer_hit`` — never a ``hit`` — because the winner was ranked
+    on other hardware: it is a plausible starting configuration, not a
+    verified local fact, and nothing is re-stored under this machine's
+    key (a later measured search writes that entry honestly).  The same
+    safety gates as a primary hit apply: the winner's Target must
+    rebuild against this inventory's first ``n_ranks`` devices with a
+    matching stored fingerprint and pass program validation — entries
+    that cannot (e.g. a mesh needing more ranks than the new job has)
+    are skipped, not errors.
+    """
+    import jax
+
+    devices = list(devices) if devices is not None else jax.devices()
+    local = devices[: int(n_ranks)] or devices
+    here = hardware_signature(local)
+    d = cache_dir()
+    try:
+        names = [n for n in os.listdir(d) if n.endswith(".json")]
+    except OSError:
+        return None
+    entries = []
+    for name in names:
+        try:
+            with open(os.path.join(d, name)) as f:
+                entry = json.load(f)
+        except (OSError, ValueError):
+            continue
+        if not isinstance(entry, dict) or entry.get("schema") != SCHEMA_VERSION:
+            continue
+        if entry.get("program") != program.fingerprint:
+            continue
+        if entry.get("options") != options:
+            continue
+        if entry.get("hardware") == here:
+            # same signature is the primary cache key's territory — a
+            # transfer is by definition a signature change (the rank
+            # count is part of the signature, so an elastic 2 -> 4 rank
+            # move on one machine IS a transfer)
+            continue
+        entries.append(entry)
+    entries.sort(key=lambda e: e.get("created", ""), reverse=True)
+    for entry in entries:
+        try:
+            target = target_from_dict(entry["winner"], devices=local)
+        except (TuneCacheError, KeyError, ValueError):
+            continue
+        if target.fingerprint != entry["winner"].get("fingerprint"):
+            continue
+        from repro import api
+
+        try:
+            api._validate_for_program(program, target)
+        except api.TargetError:
+            continue
+        _STATS.transfer_hits += 1
+        return entry, target
+    return None
 
 
 def store(key: str, entry: dict) -> str:

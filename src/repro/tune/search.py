@@ -179,6 +179,7 @@ def tune(
     devices: Optional[Sequence] = None,
     measure: bool = True,
     cache: bool = True,
+    transfer: bool = False,
     keep_quantile: float = 0.25,
     min_keep: int = 3,
     steps: int = 8,
@@ -195,6 +196,14 @@ def tune(
     ``measure=False`` selects on the cost model alone (no timed runs —
     cheap enough for CI); ``measure=True`` times the unpruned candidates
     and picks the measured argmin, identically on every process.
+
+    ``transfer=True`` adds a cross-hardware warm start: when the primary
+    cache key misses, the newest entry for the same program + options
+    under a *different* hardware signature (other machine, or another
+    rank count — elastic resume) is adopted if its winner rebuilds and
+    validates here.  It counts as a ``transfer_hit`` (never a ``hit``),
+    the winner's ``origin`` is ``"transfer"``, and nothing is stored
+    under this machine's key — run a measured search to earn that entry.
     """
     import jax
 
@@ -225,6 +234,12 @@ def tune(
             cached.hardware = hardware
             cached.n_ranks = n_ranks
             return cached
+        if transfer:
+            moved = _load_transfer(program, key, n_ranks, digest, devices)
+            if moved is not None:
+                moved.hardware = hardware
+                moved.n_ranks = n_ranks
+                return moved
 
     candidates = enumerate_candidates(
         program,
@@ -323,6 +338,37 @@ def _measure_survivors(
     # all processes adopt process 0's clock before the argmin
     for cand, t in zip(survivors, tune_measure.agree_on_times(times)):
         cand.measured_s = t
+
+
+def _load_transfer(
+    program, key: str, n_ranks: int, digest: str, devices
+) -> Optional[TuneResult]:
+    """Warm-start from another hardware signature's entry (see
+    ``cache.lookup_transfer``).  The result keys under THIS search's
+    cache key but points its ``cache_path`` at the donor entry."""
+    found = tune_cache.lookup_transfer(
+        program, n_ranks, digest, devices=devices
+    )
+    if found is None:
+        return None
+    entry, target = found
+    winner = Candidate(
+        target=target,
+        origin="transfer",
+        modeled_s=entry.get("winner_modeled_s"),
+        measured_s=entry.get("winner_measured_s"),
+    )
+    return TuneResult(
+        program_fingerprint=program.fingerprint,
+        winner=winner,
+        candidates=[],
+        measured=bool(entry.get("measured")),
+        from_cache=True,
+        cache_key=key,
+        cache_path=(
+            tune_cache.entry_path(entry["key"]) if entry.get("key") else None
+        ),
+    )
 
 
 def _load_cached(program, key: str, devices) -> Optional[TuneResult]:

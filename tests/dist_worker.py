@@ -409,6 +409,129 @@ def scenario_time_loop():
     check("time-loop-20", got, want)
 
 
+def _wave(shape):
+    """p=2 inputs > q=1 output — carried-state rotation under resume."""
+    p = ProgramBuilder("wave_res", shape)
+    um = p.input("u_prev")
+    u0 = p.input("u_now")
+    out = p.output("u_next")
+    tm, t0 = p.load(um), p.load(u0)
+    r = p.apply(
+        [tm, t0],
+        lambda b, um, u0: 2.0 * u0.at(0, 0) - um.at(0, 0)
+        + 0.1 * (
+            u0.at(-1, 0) + u0.at(1, 0) + u0.at(0, -1) + u0.at(0, 1)
+            - 4.0 * u0.at(0, 0)
+        ),
+    )
+    p.store(r, out)
+    return p
+
+
+def scenario_resilience_reshape(builder="jacobi", k=4, steps=32):
+    """ISSUE 8 acceptance: a FaultPlan-killed 4-rank run resumed onto a
+    2-rank mesh (different factorization AND rank count) finishes
+    bitwise-identical to both the uninterrupted 4-rank resilient run and
+    the single-device time_loop reference — for k ∈ {1, 4}, heat + wave."""
+    import shutil
+    import tempfile
+
+    from repro.resilience import FaultPlan, ResilientLoop, SimulatedFault, resume
+
+    shape = (64, 32)
+    builder_fn = _jacobi if builder == "jacobi" else _wave
+    prog = builder_fn(shape).finish(
+        boundary="periodic" if builder == "jacobi" else "zero"
+    )
+    rng = np.random.default_rng(13)
+    n_in = 1 if builder == "jacobi" else 2
+    state0 = tuple(
+        rng.standard_normal(shape).astype(np.float32) for _ in range(n_in)
+    )
+
+    # single-device reference over the full horizon
+    ref = api_compile(prog, Target(exchange_every=k)).time_loop(state0, steps)
+    ref = tuple(np.asarray(a) for a in (ref if isinstance(ref, tuple) else (ref,)))
+
+    big = Target(
+        mesh=_mesh((4,), ("x",)), strategy=make_strategy_1d(4),
+        exchange_every=k,
+    )
+    small = Target(
+        mesh=_mesh((2,), ("x",)), strategy=make_strategy_1d(2),
+        exchange_every=k,
+    )
+
+    d = tempfile.mkdtemp(prefix="repro-res-")
+    try:
+        # uninterrupted resilient run on the big mesh
+        full = ResilientLoop(
+            prog, big, state0, steps, directory=os.path.join(d, "full"),
+            checkpoint_every=1,
+        ).run()
+        for i, (g, w) in enumerate(zip(full, ref)):
+            check(f"res-{builder}-k{k}-uninterrupted-b{i}", g, w)
+
+        # killed mid-run on 4 ranks, resumed onto 2 ranks
+        kill = (steps // k) // 2
+        loop = ResilientLoop(
+            prog, big, state0, steps, directory=os.path.join(d, "killed"),
+            checkpoint_every=1, fault_plan=FaultPlan(kill_at_epoch=kill),
+        )
+        try:
+            loop.run()
+            print(f"MISSING SimulatedFault at epoch {kill}")
+            sys.exit(1)
+        except SimulatedFault:
+            pass
+        resumed = resume(prog, os.path.join(d, "killed"), small)
+        assert resumed.step_count == kill * k, (resumed.step_count, kill, k)
+        got = resumed.run()
+        for i, (g, w) in enumerate(zip(got, ref)):
+            check(f"res-{builder}-k{k}-4to2ranks-b{i}", g, w)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def scenario_tune_transfer():
+    """Cross-hardware-signature warm start: a winner tuned at 2 ranks
+    transfers to a 4-rank job (the rank count is part of the hardware
+    signature, so an elastic resize IS a transfer), counts as a
+    transfer_hit (never a hit), and reuses the stored winner verbatim."""
+    import tempfile
+
+    os.environ["REPRO_TUNE_CACHE"] = tempfile.mkdtemp(prefix="repro-tune-xfer-")
+    from repro.tune import cache_stats, reset_cache_stats, tune
+
+    shape = (64, 32)
+    prog = _jacobi(shape).finish(boundary="periodic")
+    kwargs = dict(
+        measure=False, backends=("jnp",), exchange_every=(1, 2),
+        overlap=(False,), fused_epoch=(False,),
+    )
+    reset_cache_stats()  # counters are process-wide; earlier scenarios tune
+    res2 = tune(prog, ranks=2, **kwargs)
+    assert not res2.from_cache and cache_stats().stores == 1
+
+    # 4-rank primary key misses; with transfer=True the 2-rank winner is
+    # adopted (its mesh rebuilds on this inventory's device prefix)
+    reset_cache_stats()
+    moved = tune(prog, ranks=4, transfer=True, **kwargs)
+    s = cache_stats().as_dict()
+    assert moved.from_cache and moved.winner.origin == "transfer", (
+        moved.from_cache, moved.winner.origin,
+    )
+    assert s["transfer_hits"] == 1 and s["hits"] == 0 and s["stores"] == 0, s
+    assert moved.target.fingerprint == res2.target.fingerprint
+
+    # without transfer the same miss falls through to a fresh search
+    reset_cache_stats()
+    fresh = tune(prog, ranks=4, **kwargs)
+    s = cache_stats().as_dict()
+    assert not fresh.from_cache and s["transfer_hits"] == 0, s
+    print("ok: tune-transfer")
+
+
 SCENARIOS = {
     "1d-zero": lambda: scenario_1d("zero"),
     "1d-periodic": lambda: scenario_1d("periodic"),
@@ -447,6 +570,12 @@ SCENARIOS = {
     # pallas_tile validation
     "tune-4rank": scenario_tune_4rank,
     "pallas-tile-shard-error": scenario_pallas_tile_shard_error,
+    # repro.resilience: killed on 4 ranks, resumed onto 2 (elastic) —
+    # bitwise vs the uninterrupted run and the single-device reference
+    "resilience-heat-k1": lambda: scenario_resilience_reshape("jacobi", k=1),
+    "resilience-heat-k4": lambda: scenario_resilience_reshape("jacobi", k=4),
+    "resilience-wave-k4": lambda: scenario_resilience_reshape("wave", k=4),
+    "tune-transfer": scenario_tune_transfer,
 }
 
 

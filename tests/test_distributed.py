@@ -40,6 +40,10 @@ SCENARIOS = [
     "ee-heat-epoch",
     "tune-4rank",
     "pallas-tile-shard-error",
+    "resilience-heat-k1",
+    "resilience-heat-k4",
+    "resilience-wave-k4",
+    "tune-transfer",
 ]
 
 
