@@ -7,6 +7,7 @@ fig8     strong-scaling model (halo bytes + roofline terms vs ranks)
 fig10    PW + tracer advection (PSyclone-like frontend, fusion counts)
 table1   backend comparison (jnp vs pallas; raw vs optimized pipeline)
 serve    mixed-traffic serving load test (repro.serve.stencil engine)
+serve_load_bursty  bursty autoscaled bucket (PoolSizer grow/shrink)
 soak     fault-injected resilience soak (checkpoint overhead, recovery)
 """
 from __future__ import annotations
@@ -47,6 +48,7 @@ def main() -> int:
         "fig10_advection": fig10_advection.run,
         "backend_compare": backend_compare.run,
         "serve_load": serve_load.run,
+        "serve_load_bursty": serve_load.run_bursty,
         "resilience_soak": resilience_soak.run,
     }
     wanted = args.only.split(",") if args.only else list(benches)

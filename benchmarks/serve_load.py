@@ -11,6 +11,14 @@ Acceptance (asserted here, not just reported): at least one engine step
 batches >= 2 same-fingerprint requests into one vmapped dispatch, and a
 spot-check request per traffic profile is bitwise-equal to a solo
 ``compile(...).time_loop(...)`` run.
+
+A second, *bursty* phase (ISSUE 9) slams one fingerprint with a
+same-instant burst against a small autoscaled pool and then drains to a
+long tail: the run must record >= 1 PoolSizer grow and >= 1 shrink with
+queue-depth/utilization provenance (saved verbatim under ``burst`` in
+``serve_load.json``), every post-resize result must stay bitwise-equal,
+and the drained bucket must retire.  ``run_bursty`` runs that phase
+standalone (``benchmarks.run --only serve_load_bursty``).
 """
 from __future__ import annotations
 
@@ -20,7 +28,11 @@ from benchmarks.common import save_record, table
 from repro import api
 from repro.api import Target
 from repro.frontends.oec_like import ProgramBuilder
-from repro.serve.stencil import StencilEngine, StencilEngineConfig
+from repro.serve.stencil import (
+    PoolSizerConfig,
+    StencilEngine,
+    StencilEngineConfig,
+)
 
 
 def _heat(shape):
@@ -89,6 +101,97 @@ def _profiles(fast: bool):
         ("wave_k2", _wave(s), Target(exchange_every=2), 2, (8, 12, 16)),
         ("advection", _advection(s), Target(), 1, (8, 16)),
     ]
+
+
+def _burst_phase(fast: bool, rng) -> dict:
+    """Bursty arrivals against one autoscaled fingerprint bucket.
+
+    A same-instant burst of short jobs lands on a 2-slot pool (queue depth
+    forces >= 1 PoolSizer grow), then the burst drains and one long-tail
+    job keeps the bucket alive at low utilization (forces >= 1 shrink).
+    Asserts: grow and shrink both recorded with queue-depth / utilization
+    provenance, every result bitwise-equal to a solo ``time_loop`` despite
+    the drain→rebuild→readmit hops, and the drained bucket retires.
+    """
+    import time
+
+    shape = (48, 48) if fast else (96, 96)
+    prog = _heat(shape)  # one fingerprint: the whole burst shares a bucket
+    n_burst = 8 if fast else 12
+    steps = [8] * (n_burst - 1) + [48 if fast else 96]  # long-tail last job
+    sizer = PoolSizerConfig(
+        min_capacity=1,
+        max_capacity=16,
+        ewma_alpha=1.0,  # react to the instantaneous signal in a short run
+        cooldown_steps=1,
+    )
+    eng = StencilEngine(
+        StencilEngineConfig(
+            slots_per_group=2, autoscale=sizer, bucket_idle_steps=4
+        )
+    )
+    states = [
+        rng.standard_normal(shape).astype(np.float32) for _ in range(n_burst)
+    ]
+    t0 = time.perf_counter()
+    handles = [
+        eng.submit(prog, (s,), n, tenant=f"burst{i}")
+        for i, (s, n) in enumerate(zip(states, steps))
+    ]
+    eng.run()
+    # keep stepping the empty engine so the drained bucket retires
+    for _ in range(eng.config.bucket_idle_steps + 1):
+        eng.step()
+    wall_s = time.perf_counter() - t0
+
+    snap = eng.metrics.snapshot()
+    auto = snap["autoscale"]
+    assert auto["grows"] >= 1, (
+        "burst never grew the pool — queue-depth autoscaling is broken"
+    )
+    assert auto["shrinks"] >= 1, (
+        "long tail never shrank the pool — utilization autoscaling is broken"
+    )
+    for event in auto["events"]:
+        for field in ("action", "from_capacity", "to_capacity",
+                      "queue_depth", "queue_ewma", "utilization_ewma"):
+            assert field in event, f"autoscale event missing {field!r}"
+    assert snap["buckets_retired"] >= 1, "drained bucket never retired"
+    # bitwise across every resize hop (drain → rebuild → readmit)
+    solo = api.compile(prog, Target())
+    for h, state, n_steps in zip(handles, states, steps):
+        want = solo.time_loop((state,), n_steps)
+        for w, o in zip(want, h.result()):
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(o))
+    return {
+        "n_requests": n_burst,
+        "steps": steps,
+        "wall_s": wall_s,
+        "grows": auto["grows"],
+        "shrinks": auto["shrinks"],
+        "events": auto["events"],
+        "buckets_retired": snap["buckets_retired"],
+        "requests_evacuated": snap["requests_evacuated"],
+        "requests_resumed": snap["requests_resumed"],
+    }
+
+
+def run_bursty(fast: bool = False) -> dict:
+    """Standalone bursty mode (``--only serve_load_bursty``)."""
+    record = _burst_phase(fast, np.random.default_rng(7))
+    rows = [
+        ("requests", record["n_requests"]),
+        ("pool grows", record["grows"]),
+        ("pool shrinks", record["shrinks"]),
+        ("buckets retired", record["buckets_retired"]),
+        ("resize evac/readmit", f"{record['requests_evacuated']}"
+                                f"/{record['requests_resumed']}"),
+        ("wall (s)", f"{record['wall_s']:.2f}"),
+    ]
+    print(table("serve_load: bursty autoscaled bucket", rows,
+                ["metric", "value"]))
+    save_record("serve_load_bursty", record)
+    return record
 
 
 def run(fast: bool = False) -> dict:
@@ -177,6 +280,10 @@ def run(fast: bool = False) -> dict:
             for name, *_ in profiles
         },
         "engine": snap,
+        # bursty phase: autoscale grow/shrink events with queue-depth /
+        # utilization provenance land in serve_load.json alongside the
+        # steady-state numbers
+        "burst": _burst_phase(fast, rng),
     }
     rows = [
         ("requests", n_requests),
@@ -190,6 +297,9 @@ def run(fast: bool = False) -> dict:
         ("mean utilization", f"{snap['mean_utilization']:.2f}"),
         ("compile-cache hits", snap["compile_cache"]["hits"]),
         ("compile-cache misses", snap["compile_cache"]["misses"]),
+        ("burst pool grows", record["burst"]["grows"]),
+        ("burst pool shrinks", record["burst"]["shrinks"]),
+        ("burst buckets retired", record["burst"]["buckets_retired"]),
     ]
     print(table("serve_load: mixed stencil traffic (one engine)", rows,
                 ["metric", "value"]))

@@ -114,6 +114,42 @@ def main() -> None:
           f"({snap['batched_dispatches']} batched dispatches, "
           f"{snap['frames_emitted']} frames); "
           f"bitwise-equal to solo: {np.array_equal(served, solo)}")
+
+    # -- elastic pools: an ensemble burst (DESIGN.md §9) -------------------
+    # an ensemble study lands as a same-instant burst of one fingerprint:
+    # the queue-depth autoscaler grows the slot pool to meet it, shrinks
+    # it on the long tail (resizes ride the checkpoint-migration path, so
+    # results stay bitwise), and the drained bucket retires — its pooled
+    # device arrays freed.
+    from repro.serve.stencil import (
+        PoolSizerConfig, StencilEngine as _Eng, StencilEngineConfig,
+    )
+
+    burst_eng = _Eng(StencilEngineConfig(
+        slots_per_group=2,
+        autoscale=PoolSizerConfig(min_capacity=1, max_capacity=8,
+                                  cooldown_steps=1, ewma_alpha=1.0),
+        bucket_idle_steps=4,
+    ))
+    rng = np.random.default_rng(0)
+    members = [u0 + 0.01 * rng.standard_normal(grid.shape).astype(np.float32)
+               for _ in range(8)]
+    # most members run short; the last runs long, so after the burst
+    # drains the pool sits underutilized and the autoscaler shrinks it
+    member_steps = [4 * k] * 7 + [24 * k]
+    burst_handles = [
+        burst_eng.submit(prog, (jnp.asarray(m),), n_steps=n,
+                         target=target, tenant=f"member{i}")
+        for i, (m, n) in enumerate(zip(members, member_steps))
+    ]
+    burst_eng.run()
+    for _ in range(5):  # idle steps: let the drained bucket retire
+        burst_eng.step()
+    auto = burst_eng.metrics.snapshot()["autoscale"]
+    print(f"ensemble burst of {len(burst_handles)}: pool grew "
+          f"{auto['grows']}x / shrank {auto['shrinks']}x, "
+          f"{burst_eng.metrics.buckets_retired} bucket retired after drain")
+
     # crude ASCII rendering of the diffused blob
     ds = uT[:: args.size // 32, :: args.size // 32]
     chars = " .:-=+*#%@"

@@ -319,6 +319,82 @@ print("resilience smoke OK: killed at epoch 5, resumed from step 20, "
       f"{loop.checkpointer.stats.as_dict()}")
 EOF
 
+echo "== elastic-serve smoke =="
+python - <<'EOF'
+# ISSUE 9: a 2-rank distributed bucket must batch its live slots into
+# ONE pooled slot-axis dispatch per engine step (per-bucket counters:
+# batched > 0, solo == 0), and a queue burst against a small autoscaled
+# bucket must record >= 1 PoolSizer grow and >= 1 shrink — with every
+# result bitwise-equal to a solo compile(...).time_loop(...) run
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro import api
+from repro.core.passes.decompose import make_strategy_1d
+from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
+from repro.serve.stencil import (
+    PoolSizerConfig,
+    StencilEngine,
+    StencilEngineConfig,
+)
+
+grid = Grid(shape=(48, 48), extent=(1.0, 1.0))
+u = TimeFunction(name="u", grid=grid, space_order=2)
+dt = 0.8 * grid.spacing[0] ** 2 / (4 * 0.5)
+heat = Operator(Eq(u.dt, 0.5 * u.laplace), dt=dt, boundary="zero").program
+mesh = Mesh(np.array(jax.devices()[:2]), ("x",))
+target = api.Target(mesh=mesh, strategy=make_strategy_1d(2))
+rng = np.random.default_rng(0)
+solo = api.compile(heat, target)
+
+# -- pooled distributed dispatch: 4 live slots, ONE dispatch per step --
+eng = StencilEngine(StencilEngineConfig(slots_per_group=4))
+states = [rng.standard_normal((48, 48)).astype(np.float32) for _ in range(4)]
+hs = [eng.submit(heat, (s,), 6, target=target) for s in states]
+eng.run()
+bd = eng.metrics.bucket_dispatches[f"{heat.fingerprint}/{target.fingerprint}"]
+assert bd["batched"] >= 1 and bd["solo"] == 0, (
+    f"2-rank bucket did not dispatch pooled: {bd}"
+)
+for h, s in zip(hs, states):
+    want = solo.time_loop((s,), 6)
+    for a, b in zip(h.result(), want if isinstance(want, tuple) else (want,)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            f"pooled result differs from solo run for rid={h.rid}"
+        )
+
+# -- queue burst: autoscaler must grow on depth, shrink on the tail ----
+eng2 = StencilEngine(StencilEngineConfig(
+    slots_per_group=2,
+    autoscale=PoolSizerConfig(min_capacity=1, max_capacity=8,
+                              cooldown_steps=1, ewma_alpha=1.0),
+))
+burst = [rng.standard_normal((48, 48)).astype(np.float32) for _ in range(8)]
+steps = [6] * 7 + [36]
+hs2 = [eng2.submit(heat, (s,), n, target=target)
+       for s, n in zip(burst, steps)]
+eng2.run()
+auto = eng2.metrics.snapshot()["autoscale"]
+assert auto["grows"] >= 1 and auto["shrinks"] >= 1, auto
+for h, s, n in zip(hs2, burst, steps):
+    want = solo.time_loop((s,), n)
+    for a, b in zip(h.result(), want if isinstance(want, tuple) else (want,)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            f"post-resize result differs from solo run for rid={h.rid}"
+        )
+print(f"elastic-serve smoke OK: bucket counters {bd}, "
+      f"autoscale grows={auto['grows']} shrinks={auto['shrinks']}, "
+      "all results bitwise-equal")
+EOF
+
 if [[ "${1:-}" == "--smoke" ]]; then
   echo "smoke only: skipping tier-1 tests"
   exit 0

@@ -172,6 +172,19 @@ class Target:
     # epoch instead of k.  Requires backend="pallas"; incompatible with
     # overlap (split frame applies cannot fuse into one kernel).
     fused_epoch: bool = False
+    # Slot mesh axis (serving/ensemble batching): name of a mesh axis that
+    # carries a leading *batch* ("slot") dimension instead of an array
+    # dimension.  The compiled step then takes arrays of shape
+    # ``[B, *field_shape]`` and runs as ONE ``shard_map`` over
+    # ``(slot, *spatial)`` — the batch dim is sharded over the slot axis
+    # and each device block vmaps the rank-local stencil over its rows,
+    # so halo exchanges stay per-slot-correct (collectives only ever run
+    # over the spatial axes).  ``B`` must divide by the slot-axis size at
+    # call time.  Factored out of the device inventory with
+    # ``pooled_target`` / ``dist.sharding.factor_slot_mesh``; this is how
+    # the serve engine dispatches a whole distributed slot pool as one
+    # pooled call (DESIGN.md §9).
+    slot_axis: Optional[str] = None
     # None resolves via kernels.default_interpret(): interpret mode on
     # CPU-only hosts (the correctness oracle), native Pallas when an
     # accelerator is present; REPRO_PALLAS_INTERPRET overrides.
@@ -250,6 +263,35 @@ class Target:
                     f"pipeline stage temporal-tile{{k={k_spec}}} disagrees "
                     f"with Target(exchange_every={self.exchange_every}); "
                     "set both to the same epoch depth"
+                )
+        if self.slot_axis is not None:
+            # validated here like exchange_every: a slot-axis target either
+            # compiles or names the mismatch at construction
+            if not isinstance(self.slot_axis, str) or not self.slot_axis:
+                raise TargetError(
+                    f"slot_axis must be a mesh axis name, got "
+                    f"{self.slot_axis!r}"
+                )
+            if self.mesh is None:
+                raise TargetError(
+                    f"Target(slot_axis={self.slot_axis!r}) needs a mesh "
+                    "carrying that axis; factor one out of the device "
+                    "inventory with api.pooled_target / "
+                    "dist.sharding.factor_slot_mesh"
+                )
+            if self.slot_axis not in self.mesh.axis_names:
+                raise TargetError(
+                    f"slot_axis {self.slot_axis!r} not in mesh axes "
+                    f"{tuple(self.mesh.axis_names)}"
+                )
+            if self.strategy is not None and self.slot_axis in tuple(
+                self.strategy.axis_names
+            ):
+                raise TargetError(
+                    f"slot_axis {self.slot_axis!r} is already a spatial "
+                    f"decomposition axis of the strategy "
+                    f"{tuple(self.strategy.axis_names)}; the slot axis "
+                    "carries the batch dimension, not an array dimension"
                 )
         s = self.strategy
         if s is not None:
@@ -344,9 +386,24 @@ class Target:
 
     @property
     def distributed(self) -> bool:
+        """True when compilation wraps the step in ``shard_map`` — a
+        spatial decomposition with > 1 rank, a slot mesh axis, or both."""
+        if self.mesh is not None and self.slot_axis is not None:
+            return True
         return self.mesh is not None and self.strategy is not None and any(
             g > 1 for g in self.strategy.grid_shape
         )
+
+    @property
+    def spatial_ranks(self) -> int:
+        """Devices per slot: the product of the spatial decomposition grid
+        (1 for an undecomposed target)."""
+        if self.strategy is None:
+            return 1
+        out = 1
+        for g in self.strategy.grid_shape:
+            out *= int(g)
+        return out
 
     @property
     def fingerprint(self) -> str:
@@ -372,6 +429,11 @@ class Target:
                 # explicit ``pipeline`` must still produce distinct cached
                 # artifacts per epoch depth (time_loop arithmetic differs)
                 f"exchange_every={self.exchange_every}",
+                # explicit even though the mesh desc carries the axis: a
+                # slot-axis artifact has a different calling convention
+                # ([B, *shape] arrays), so it must never collide with its
+                # spatial-only sibling in the compile cache
+                f"slot_axis={self.slot_axis}",
                 f"fused_epoch={self.fused_epoch}",
                 f"pallas_interpret={self.pallas_interpret}",
                 f"pallas_tile={self.pallas_tile}",
@@ -469,14 +531,20 @@ class CompiledStencil:
         """A step over the *input* fields only: output buffers (fully
         overwritten every call) are allocated internally — the shape
         ``time_loop`` rotation wants.  With ``Target(exchange_every=k)``
-        one call advances a whole k-step epoch."""
+        one call advances a whole k-step epoch.  A slot-axis target takes
+        (and allocates) ``[B, *field_shape]`` arrays — one pooled call
+        advances ``B`` independent simulations."""
         outs = set(self._out_indices)
+        pooled = self.target.slot_axis is not None
 
         def fn(*inputs):
             it = iter(inputs)
             dt = dtype or (inputs[0].dtype if inputs else jnp.float32)
+            lead = (inputs[0].shape[0],) if (pooled and inputs) else ()
             args = [
-                jnp.zeros(f.type.bounds.shape, dt) if i in outs else next(it)
+                jnp.zeros(lead + tuple(f.type.bounds.shape), dt)
+                if i in outs
+                else next(it)
                 for i, f in enumerate(self.program.field_args)
             ]
             rest = list(it)
@@ -550,6 +618,13 @@ class CompiledStencil:
     def lower(self, dtype=jnp.float32):
         """AOT-lower with ShapeDtypeStruct inputs (no allocation) — the
         dry-run entry point: ``.lower().compile().memory_analysis()``."""
+        # a slot-axis artifact takes [B, *shape]: lower at one row per
+        # slot-axis shard, the narrowest batch the mesh can carry
+        lead = (
+            (int(self.target.mesh.shape[self.target.slot_axis]),)
+            if self.target.slot_axis is not None
+            else ()
+        )
         args = []
         for f, spec in zip(self.program.field_args, self.partition_specs):
             sharding = (
@@ -558,7 +633,9 @@ class CompiledStencil:
                 else None
             )
             args.append(
-                jax.ShapeDtypeStruct(f.type.bounds.shape, dtype, sharding=sharding)
+                jax.ShapeDtypeStruct(
+                    lead + tuple(f.type.bounds.shape), dtype, sharding=sharding
+                )
             )
         return jax.jit(self._raw_fn).lower(*args)
 
@@ -869,6 +946,37 @@ def _validate_exchange_every(program: Program, target: Target) -> None:
             )
 
 
+def pooled_target(
+    target: Target,
+    slots: int = 1,
+    axis: str = "slot",
+    devices: Optional[Sequence] = None,
+) -> Target:
+    """The slot-axis sibling of a distributed ``target``: the same spatial
+    decomposition plus a leading slot mesh axis of size ``slots`` factored
+    out of the device inventory (``dist.sharding.factor_slot_mesh``).
+
+    The sibling's compiled step takes ``[B, *field_shape]`` arrays
+    (``B % slots == 0``) and advances every row in ONE ``shard_map``
+    dispatch over ``(slot, *spatial)`` — the serve engine's batched
+    distributed dispatch, and the ensemble axis of the ROADMAP (one
+    compiled stencil over ``B`` perturbed initial conditions).
+    """
+    from repro.dist.sharding import factor_slot_mesh
+
+    if target.mesh is None:
+        raise TargetError(
+            "pooled_target needs a distributed target (mesh + strategy); "
+            "a single-device pool is just jax.vmap over the step"
+        )
+    if target.slot_axis is not None:
+        raise TargetError(
+            f"target already carries slot axis {target.slot_axis!r}"
+        )
+    mesh = factor_slot_mesh(target.mesh, slots, axis=axis, devices=devices)
+    return dataclasses.replace(target, mesh=mesh, slot_axis=axis)
+
+
 def partition_specs(program: Program, strategy: SlicingStrategy) -> list:
     """PartitionSpec per field argument, from the decomposition map."""
     specs = []
@@ -921,11 +1029,22 @@ def _build(program: Program, target: Target) -> CompiledStencil:
 
     raw: Callable = interp
     if distributed:
-        out_specs = tuple(specs[i] for i in ret_indices)
         from repro.dist.sharding import shard_map  # version-portable
 
+        body: Callable = interp
+        if target.slot_axis is not None:
+            # slot-axis calling convention: every field carries a leading
+            # batch dim sharded over the slot axis; each device block
+            # vmaps the rank-local step over its rows.  Collectives
+            # (ppermute halo exchanges, axis_index boundary masks) bind
+            # the *spatial* axis names, which vmap batches through — each
+            # row sees exactly the solo exchange pattern, so the pooled
+            # dispatch stays bitwise-equal to per-slot solo dispatches.
+            body = jax.vmap(interp)
+            specs = [P(target.slot_axis, *tuple(s)) for s in specs]
+        out_specs = tuple(specs[i] for i in ret_indices)
         raw = shard_map(
-            interp,
+            body,
             mesh=target.mesh,
             in_specs=tuple(specs),
             out_specs=out_specs if len(out_specs) > 1 else out_specs[0],

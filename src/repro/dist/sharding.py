@@ -180,6 +180,52 @@ def shard_map(f, *, mesh: Mesh, in_specs, out_specs, check_vma: bool = False):
     )
 
 
+def factor_slot_mesh(
+    mesh: Mesh,
+    slots: int = 1,
+    axis: str = "slot",
+    devices=None,
+) -> Mesh:
+    """Extend a spatial ``mesh`` with a leading slot axis of size
+    ``slots`` factored out of the device inventory.
+
+    The slot axis carries a *batch* dimension (pooled serving slots, or
+    ensemble members), not an array dimension: collectives keep binding
+    the spatial axis names, so each slot block of ``slots × spatial``
+    devices runs the exact solo exchange pattern.  ``slots == 1`` reuses
+    the mesh's own devices (shard_map over ``(slot=1, *spatial)`` — the
+    vmap inside still pools the batch); ``slots > 1`` takes the first
+    ``slots * spatial`` devices of ``devices`` (default: the process
+    inventory), slot-major, so slot block 0 is the original mesh's
+    device prefix.
+    """
+    import numpy as np
+
+    if int(slots) != slots or slots < 1:
+        raise ValueError(f"slots must be a positive integer, got {slots!r}")
+    slots = int(slots)
+    if axis in mesh.axis_names:
+        raise ValueError(
+            f"slot axis {axis!r} collides with mesh axes "
+            f"{tuple(mesh.axis_names)}"
+        )
+    spatial_shape = tuple(mesh.shape[a] for a in mesh.axis_names)
+    names = (axis,) + tuple(mesh.axis_names)
+    if slots == 1:
+        devs = mesh.devices.reshape((1,) + spatial_shape)
+        return Mesh(devs, names)
+    n_spatial = int(np.prod(spatial_shape))
+    pool = list(devices) if devices is not None else jax.devices()
+    need = slots * n_spatial
+    if need > len(pool):
+        raise ValueError(
+            f"slot axis of {slots} over a {n_spatial}-rank spatial mesh "
+            f"needs {need} devices, have {len(pool)}"
+        )
+    devs = np.array(pool[:need]).reshape((slots,) + spatial_shape)
+    return Mesh(devs, names)
+
+
 def reshard(arrays, mesh: Optional[Mesh], specs) -> tuple:
     """Place host arrays onto ``mesh`` with one ``PartitionSpec`` each —
     the elastic-restore path: state checkpointed under one mesh

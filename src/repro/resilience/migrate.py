@@ -151,6 +151,56 @@ def admit(engine, directory: str, programs, target=None) -> list:
     return handles
 
 
+# --------------------------------------------------------------------------
+# in-process drain/readmit — the slot-pool *resize* path
+# --------------------------------------------------------------------------
+
+
+def drain_group(engine, group, directory: str) -> list:
+    """Checkpoint every active request of ``group`` at its epoch-aligned
+    ``steps_done`` and release its slot, keeping the request objects —
+    unlike ``evacuate``, handles, ``on_frame`` callbacks and buffered
+    frames all stay valid, because the same objects readmit into the
+    rebuilt pool (``readmit_group``).  This is the engine's pool-resize
+    primitive: the checkpoint roundtrip is exactly PR 8's migration
+    contract, so results after a resize stay bitwise-equal."""
+    from repro.tune.cache import target_to_dict
+
+    drained = []
+    for slot, req in sorted(group.active.items()):
+        _save_request(directory, req, group.read_slot(slot), target_to_dict)
+        engine.scheduler.reclaim(group, slot)
+        req.slot = -1
+        drained.append(req)
+    engine.metrics.requests_evacuated += len(drained)
+    return drained
+
+
+def readmit_group(engine, group, directory: str, requests) -> list:
+    """Restore each drained request's checkpointed state and requeue the
+    SAME object at the front of ``group``'s queue (rid order), ahead of
+    requests that arrived during the resize — a resize must never reorder
+    a running request behind the backlog that triggered it.  Admission
+    recomputes the frame cadence from the preserved ``steps_done``, so
+    streamed frame ``step`` values stay strictly increasing across the
+    hop.  Returns the readmitted requests."""
+    from repro.serve.stencil.request import QUEUED
+
+    restored = []
+    for req in sorted(requests, key=lambda r: r.rid):
+        ckpt = Checkpointer(os.path.join(directory, f"req_{req.rid}"))
+        manifest = ckpt.manifest()
+        n_bufs = len(manifest["leaves"])
+        tree_like = {"state": {f"b{i}": np.zeros(()) for i in range(n_bufs)}}
+        tree = ckpt.restore(tree_like)
+        req.state = tuple(tree["state"][f"b{i}"] for i in range(n_bufs))
+        req.status = QUEUED
+        restored.append(req)
+    group.queue.extendleft(reversed(restored))
+    engine.metrics.requests_resumed += len(restored)
+    return restored
+
+
 def _program_index(programs) -> dict:
     if hasattr(programs, "fingerprint"):  # a single Program
         return {programs.fingerprint: programs}

@@ -16,4 +16,9 @@ from repro.serve.stencil.request import (  # noqa: F401
     RequestHandle,
     StencilRequest,
 )
-from repro.serve.stencil.scheduler import Scheduler, SlotPool  # noqa: F401
+from repro.serve.stencil.scheduler import (  # noqa: F401
+    PoolSizer,
+    PoolSizerConfig,
+    Scheduler,
+    SlotPool,
+)

@@ -26,10 +26,24 @@ slot pool of ``serve/engine.py`` onto the PR 3 compile surface:
   depth, and per-fingerprint dispatch latency (p50/p99 wall time per
   epoch dispatch — ``metrics.py``).
 
-Distributed targets (``target.distributed``) are served too, but solo:
-one ``shard_map``-ed call per live slot (vmapping over a mesh-spanning
-program would nest batching inside the collective); they are counted as
-solo dispatches, which the metrics make visible.
+Distributed targets (``target.distributed``) batch too: the engine
+derives the bucket target's *slot-axis sibling* (``api.pooled_target`` —
+a second mesh axis factored out of the device inventory, widest feasible
+per ``tune.space.slot_width_candidates``) and dispatches the whole pool
+as ONE ``shard_map`` over ``(slot, *spatial)`` per engine step.  Halo
+collectives bind the spatial axis names and vmap batches through them,
+so the pooled dispatch stays bitwise-equal to per-slot solo dispatches —
+the ``dist_worker`` harness asserts it.  When the sibling cannot compile
+(exotic backend, inventory too small) the bucket falls back to the solo
+loop, now with a single batched row-commit per step instead of a
+full-pool rewrite per slot.
+
+Buckets are *elastic*: an optional ``PoolSizer`` (``config.autoscale``)
+resizes capacities between steps from queue-depth/utilization EWMAs —
+the resize drains the bucket to epoch-aligned checkpoints and readmits
+through ``repro.resilience.migrate``, so it is bitwise-invisible to
+tenants — and buckets idle past ``config.bucket_idle_steps`` retire,
+freeing their pooled device arrays (``metrics.buckets_retired``).
 
 Every request's final state is **bitwise-equal** to a solo
 ``compile(program, target).time_loop(state, n_steps)`` run — the batched
@@ -53,25 +67,43 @@ from repro.serve.stencil.request import (
     StencilRequest,
     now,
 )
-from repro.serve.stencil.scheduler import Scheduler, SlotPool
+from repro.serve.stencil.scheduler import (
+    PoolSizer,
+    PoolSizerConfig,
+    Scheduler,
+    SlotPool,
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class StencilEngineConfig:
     """Engine knobs.
 
-    ``slots_per_group`` is the fixed pool size per fingerprint bucket —
-    the batch width of the vmapped dispatch.  ``history_limit`` bounds
-    the retained per-step metrics rows.
+    ``slots_per_group`` is the *initial* pool size per fingerprint
+    bucket — the batch width of the pooled dispatch.  ``history_limit``
+    bounds the retained per-step metrics rows.  ``pooled_distributed``
+    dispatches distributed buckets as one slot-axis ``shard_map`` call
+    (the solo per-slot loop survives as fallback).  ``autoscale`` turns
+    on the queue-depth ``PoolSizer`` with the given policy.
+    ``bucket_idle_steps`` retires a bucket after that many consecutive
+    workless engine steps, freeing its pooled arrays (0 = never).
     """
 
     slots_per_group: int = 4
     history_limit: int = 10_000
+    pooled_distributed: bool = True
+    autoscale: Optional[PoolSizerConfig] = None
+    bucket_idle_steps: int = 50
 
     def __post_init__(self) -> None:
         if self.slots_per_group < 1:
             raise ValueError(
                 f"slots_per_group must be >= 1, got {self.slots_per_group}"
+            )
+        if self.bucket_idle_steps < 0:
+            raise ValueError(
+                f"bucket_idle_steps must be >= 0, got "
+                f"{self.bucket_idle_steps}"
             )
 
 
@@ -83,6 +115,11 @@ class StencilEngine:
         self.config = config or StencilEngineConfig()
         self.scheduler = Scheduler(self.config.slots_per_group)
         self.metrics = EngineMetrics(self.config.history_limit)
+        self.sizer = (
+            PoolSizer(self.config.autoscale)
+            if self.config.autoscale is not None
+            else None
+        )
         self.finished: list[StencilRequest] = []
         self.engine_step_count = 0
         self._next_rid = 0
@@ -164,19 +201,59 @@ class StencilEngine:
         return RequestHandle(req)
 
     def step(self) -> StepMetrics:
-        """One engine step: admit, dispatch every non-empty bucket once,
-        stream frames, reclaim + refill finished slots."""
+        """One engine step: autoscale, admit, dispatch every non-empty
+        bucket once (pooled — vmapped or slot-axis ``shard_map``ed — with
+        a solo fallback), stream frames, reclaim + refill finished slots,
+        retire idle buckets."""
         self.engine_step_count += 1
+        if self.sizer is not None:
+            self._autoscale()
         batched = solo = steps_advanced = 0
         live_at_dispatch = 0
+        busy = set()
         for group in list(self.scheduler.groups.values()):
             self.scheduler.admit(group)
             live = sorted(group.active.items())
             live_at_dispatch += len(live)
             if not live:
                 continue
+            busy.add(group.key)
             bucket = f"{group.key[0]}/{group.key[1]}"
+            pooled_fn = None
             if group.compiled.target.distributed:
+                if self.config.pooled_distributed:
+                    pooled_fn = self._pooled_fn(group)
+            else:
+                pooled_fn = self._pool_fn(group)
+            dispatched = False
+            if pooled_fn is not None:
+                try:
+                    t0 = time.perf_counter()
+                    outs = pooled_fn(*group.state)
+                    outs = outs if isinstance(outs, tuple) else (outs,)
+                    jax.block_until_ready(outs)
+                except Exception:
+                    if not group.compiled.target.distributed:
+                        raise
+                    # the slot-axis sibling traced but cannot execute on
+                    # this inventory — remember and fall back to solo
+                    group.pooled = (group.capacity, None)
+                else:
+                    self.metrics.record_dispatch(
+                        bucket, time.perf_counter() - t0
+                    )
+                    group.rotate(outs)
+                    dispatched = True
+                    if len(live) >= 2:
+                        batched += 1
+                        self.metrics.record_bucket_dispatch(bucket, True)
+                    else:
+                        solo += 1
+                        self.metrics.record_bucket_dispatch(bucket, False)
+            if not dispatched:
+                # solo fallback: one shard_map call per live slot, rows
+                # buffered and committed in ONE batched write per buffer
+                rows = {}
                 for slot, _ in live:
                     t0 = time.perf_counter()
                     outs = group.compiled.step()(*group.read_slot(slot))
@@ -185,19 +262,11 @@ class StencilEngine:
                     self.metrics.record_dispatch(
                         bucket, time.perf_counter() - t0
                     )
-                    group.rotate_slot(slot, outs)
+                    row = group.read_slot(slot)
+                    rows[slot] = tuple(row[len(outs):]) + tuple(outs)
                     solo += 1
-            else:
-                t0 = time.perf_counter()
-                outs = self._pool_fn(group)(*group.state)
-                outs = outs if isinstance(outs, tuple) else (outs,)
-                jax.block_until_ready(outs)
-                self.metrics.record_dispatch(bucket, time.perf_counter() - t0)
-                group.rotate(outs)
-                if len(live) >= 2:
-                    batched += 1
-                else:
-                    solo += 1
+                    self.metrics.record_bucket_dispatch(bucket, False)
+                group.commit_rows(rows)
             k = group.exchange_every
             for slot, req in live:
                 req.steps_done += k
@@ -208,6 +277,11 @@ class StencilEngine:
             # continuous admission: refill slots freed this very step so
             # the next dispatch runs at full width
             self.scheduler.admit(group)
+        if self.config.bucket_idle_steps:
+            retired = self.scheduler.retire_idle(
+                self.config.bucket_idle_steps, busy
+            )
+            self.metrics.buckets_retired += len(retired)
         metrics = StepMetrics(
             engine_step=self.engine_step_count,
             live_slots=live_at_dispatch,
@@ -223,12 +297,15 @@ class StencilEngine:
 
     def run(self, max_engine_steps: int = 100_000) -> list:
         """Drive the engine until every submitted request finished (or the
-        step budget runs out); returns the finished requests."""
+        step budget runs out); returns the requests that finished during
+        THIS call — ``self.finished`` keeps the engine-lifetime history,
+        but a second ``run()`` must not re-report the first one's work."""
+        first = len(self.finished)
         for _ in range(max_engine_steps):
             if not self.pending:
                 break
             self.step()
-        return self.finished
+        return self.finished[first:]
 
     @property
     def pending(self) -> int:
@@ -259,6 +336,42 @@ class StencilEngine:
     def utilization(self) -> float:
         return self.scheduler.total_live / max(1, self.scheduler.total_slots)
 
+    # -- elasticity ------------------------------------------------------
+    def resize_bucket(
+        self, group: SlotPool, new_capacity: int,
+        directory: Optional[str] = None,
+    ) -> None:
+        """Rebuild ``group``'s pool at ``new_capacity`` through the
+        migration path: drain every active request to an epoch-aligned
+        checkpoint, reallocate the pool arrays at the new width, readmit
+        the same request objects at the queue front.  Bitwise-invisible
+        to tenants by PR 8's migration contract — the checkpointed state
+        is exact, admission rewrites it into a (new) slot, and frame
+        cadence continues from the preserved ``steps_done``."""
+        import shutil
+        import tempfile
+
+        from repro.resilience.migrate import drain_group, readmit_group
+
+        tmp = directory or tempfile.mkdtemp(prefix="repro-pool-resize-")
+        try:
+            drained = drain_group(self, group, tmp)
+            group.rebuild(int(new_capacity))
+            readmit_group(self, group, tmp, drained)
+        finally:
+            if directory is None:
+                shutil.rmtree(tmp, ignore_errors=True)
+
+    def _autoscale(self) -> None:
+        for group in list(self.scheduler.groups.values()):
+            decision = self.sizer.observe(group)
+            if decision is None:
+                continue
+            new_capacity, provenance = decision
+            self.resize_bucket(group, new_capacity)
+            provenance["engine_step"] = self.engine_step_count
+            self.metrics.record_autoscale(provenance)
+
     # -- internals -------------------------------------------------------
     def _pool_fn(self, group: SlotPool) -> Callable:
         """The bucket's shape-stable pool executable: ONE jitted vmap of
@@ -275,6 +388,33 @@ class StencilEngine:
         return api.cached_callable(
             key, lambda: jax.jit(jax.vmap(compiled.step()))
         )
+
+    def _pooled_fn(self, group: SlotPool) -> Optional[Callable]:
+        """The distributed bucket's ONE-dispatch executable: the compiled
+        step of the target's slot-axis sibling (``api.pooled_target``),
+        taking the whole ``[capacity, *shape]`` pool per buffer.  The
+        slot width is the widest feasible for this inventory
+        (``tune.space.slot_width_candidates``; width 1 still pools — the
+        inner vmap batches within each spatial shard).  Memoized on the
+        group per pool width; ``None`` when the sibling cannot compile,
+        which routes the bucket to the solo fallback loop."""
+        if group.pooled is not None and group.pooled[0] == group.capacity:
+            compiled = group.pooled[1]
+            return None if compiled is None else compiled.step()
+        from repro.tune.space import slot_width_candidates
+
+        target = group.compiled.target
+        compiled = None
+        try:
+            width = slot_width_candidates(
+                len(jax.devices()), target.spatial_ranks, group.capacity
+            )[0]
+            pooled = api.pooled_target(target, slots=width)
+            compiled = api.compile(group.compiled.program, pooled)
+        except Exception:
+            compiled = None
+        group.pooled = (group.capacity, compiled)
+        return None if compiled is None else compiled.step()
 
     def _stream_frames(self, group: SlotPool, req: StencilRequest) -> None:
         if req.frame_every <= 0:

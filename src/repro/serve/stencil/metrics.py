@@ -56,6 +56,14 @@ class EngineMetrics:
         self.requests_resumed = 0     # admitted from checkpoints (migration in)
         self.frames_emitted = 0
         self.steps_advanced = 0
+        self.kernel_dispatches = 0    # total timed dispatches (kernel launches)
+        self.buckets_retired = 0      # idle buckets whose pools were freed
+        self.pool_grows = 0
+        self.pool_shrinks = 0
+        self.autoscale_events: list = []   # PoolSizer provenance dicts
+        # "program_fp/target_fp" -> {"batched": n, "solo": n} — the
+        # per-bucket proof that a distributed bucket dispatched pooled
+        self.bucket_dispatches: dict = {}
         # "program_fp/target_fp" -> bounded deque of dispatch wall seconds
         self.step_seconds: dict = {}
         self._latency_limit = int(history_limit)
@@ -77,6 +85,24 @@ class EngineMetrics:
         if times is None:
             times = self.step_seconds[key] = deque(maxlen=self._latency_limit)
         times.append(float(seconds))
+        self.kernel_dispatches += 1
+
+    def record_bucket_dispatch(self, key: str, batched: bool) -> None:
+        """Per-bucket batched/solo tally — a ≥2-live distributed bucket
+        on the pooled path must show ``batched > 0, solo == 0``."""
+        d = self.bucket_dispatches.setdefault(key, {"batched": 0, "solo": 0})
+        d["batched" if batched else "solo"] += 1
+
+    def record_autoscale(self, event: dict) -> None:
+        """One PoolSizer resize decision, with its queue/utilization
+        provenance (the event dict ``PoolSizer.observe`` returned)."""
+        self.autoscale_events.append(dict(event))
+        if len(self.autoscale_events) > self._latency_limit:
+            del self.autoscale_events[0]
+        if event.get("action") == "grow":
+            self.pool_grows += 1
+        else:
+            self.pool_shrinks += 1
 
     # -- reporting -------------------------------------------------------
     @property
@@ -129,6 +155,16 @@ class EngineMetrics:
             "steps_advanced": self.steps_advanced,
             "batched_dispatches": self.batched_dispatches,
             "solo_dispatches": self.solo_dispatches,
+            "kernel_dispatches": self.kernel_dispatches,
+            "buckets_retired": self.buckets_retired,
+            "bucket_dispatches": {
+                k: dict(v) for k, v in self.bucket_dispatches.items()
+            },
+            "autoscale": {
+                "grows": self.pool_grows,
+                "shrinks": self.pool_shrinks,
+                "events": [dict(e) for e in self.autoscale_events],
+            },
             "mean_utilization": self.mean_utilization(),
             "compile_cache": self.compile_cache(),
             "queue_depth": dict(last.queue_depth) if last else {},

@@ -14,7 +14,14 @@ shape-stable executables, continuous admission) applied to stencil jobs:
   live (dead slots compute garbage that is never read);
 - admission writes a request's initial state into its slot's rows;
   reclaim frees the slot the moment the request's ``n_steps`` are done,
-  so a long request never stalls the short ones behind it.
+  so a long request never stalls the short ones behind it;
+- buckets are *elastic*: a ``PoolSizer`` policy resizes ``capacity``
+  between engine steps from queue-depth / utilization EWMAs (the engine
+  drains + readmits through the migration checkpointing path, so resizes
+  stay bitwise-invisible), and a bucket that stays idle past a threshold
+  is retired — its pooled ``[capacity, *shape]`` arrays freed — so a
+  serving process's memory tracks its *live* traffic, not every
+  fingerprint it has ever seen.
 """
 from __future__ import annotations
 
@@ -38,6 +45,10 @@ class SlotPool:
     free: list = dataclasses.field(default_factory=list)
     active: dict = dataclasses.field(default_factory=dict)  # slot -> request
     queue: deque = dataclasses.field(default_factory=deque)
+    idle_steps: int = 0         # consecutive engine steps with no work
+    # (capacity, CompiledStencil|None): the slot-axis pooled sibling for a
+    # distributed target, memoized per pool width (None = not factorable)
+    pooled: Optional[tuple] = None
 
     def __post_init__(self) -> None:
         self.free = list(range(self.capacity))
@@ -81,6 +92,44 @@ class SlotPool:
         row = self.read_slot(slot)
         new_row = tuple(row[len(outs):]) + tuple(outs)
         self.write_slot(slot, new_row)
+
+    def commit_rows(self, rows: dict) -> None:
+        """Batched commit of per-slot rows: ONE ``.at[idx].set`` per
+        input buffer instead of a full-pool rewrite per slot — the solo
+        dispatch loop buffers each slot's rotated row here and commits
+        once, turning O(capacity²) memory traffic per engine step back
+        into O(capacity)."""
+        if not rows:
+            return
+        slots = sorted(rows)
+        idx = jnp.asarray(slots)
+        self.state = tuple(
+            ps.at[idx].set(
+                jnp.stack([jnp.asarray(rows[s][b], ps.dtype) for s in slots])
+            )
+            for b, ps in enumerate(self.state)
+        )
+
+    # -- elasticity ------------------------------------------------------
+    def rebuild(self, new_capacity: int) -> None:
+        """Reallocate the pool at ``new_capacity`` (resize path).  Only
+        legal on a drained pool — the engine checkpoints every active
+        request out first, rebuilds, then readmits through the queue."""
+        if self.active:
+            raise RuntimeError(
+                f"rebuild of bucket {self.key[0][:12]}… with "
+                f"{len(self.active)} active slots; drain it first"
+            )
+        self.capacity = int(new_capacity)
+        self.state = ()
+        self.pooled = None  # pool width changed; re-factor the slot axis
+        self.__post_init__()
+
+    def release(self) -> None:
+        """Drop the pooled device arrays (retirement path)."""
+        self.state = ()
+        self.free = []
+        self.pooled = None
 
 
 class Scheduler:
@@ -136,6 +185,26 @@ class Scheduler:
         del group.active[slot]
         group.free.append(slot)
 
+    def retire_idle(self, idle_limit: int, busy=()) -> list:
+        """Retire buckets idle (no active slots, empty queue, and not in
+        ``busy`` — keys that dispatched this very step) for
+        ``idle_limit`` consecutive engine steps: release their pooled
+        device arrays and drop them from ``groups``, so ``total_slots``
+        and ``utilization`` reflect only live traffic.  Returns the
+        retired bucket keys.  A retired fingerprint that returns later
+        simply gets a fresh bucket from ``group_for``."""
+        retired = []
+        for key, group in list(self.groups.items()):
+            if group.active or group.queue or key in busy:
+                group.idle_steps = 0
+                continue
+            group.idle_steps += 1
+            if group.idle_steps >= idle_limit:
+                group.release()
+                del self.groups[key]
+                retired.append(key)
+        return retired
+
     # -- introspection ---------------------------------------------------
     def queue_depths(self) -> dict:
         return {
@@ -153,3 +222,110 @@ class Scheduler:
     @property
     def total_queued(self) -> int:
         return sum(len(g.queue) for g in self.groups.values())
+
+
+# --------------------------------------------------------------------------
+# queue-depth autoscaling policy
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSizerConfig:
+    """Knobs for the queue-depth autoscaler.
+
+    Grow when the *queued-per-slot* EWMA exceeds ``grow_queue_per_slot``
+    (demand outruns the pool); shrink when the utilization EWMA falls
+    below ``shrink_utilization`` with an empty queue (pool outruns
+    demand).  ``cooldown_steps`` of hysteresis follow every resize —
+    each resize re-specializes the bucket's pooled executable (the
+    compile cache keys on pool width), so back-to-back flapping would
+    thrash the cache for no throughput win.
+    """
+
+    min_capacity: int = 1
+    max_capacity: int = 64
+    grow_queue_per_slot: float = 0.5
+    shrink_utilization: float = 0.25
+    grow_factor: float = 2.0
+    shrink_factor: float = 0.5
+    ewma_alpha: float = 0.5
+    cooldown_steps: int = 3
+
+    def __post_init__(self) -> None:
+        if not 1 <= self.min_capacity <= self.max_capacity:
+            raise ValueError(
+                f"need 1 <= min_capacity <= max_capacity, got "
+                f"[{self.min_capacity}, {self.max_capacity}]"
+            )
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError(f"ewma_alpha in (0, 1], got {self.ewma_alpha}")
+        if self.grow_factor <= 1.0 or not 0.0 < self.shrink_factor < 1.0:
+            raise ValueError(
+                f"need grow_factor > 1 and 0 < shrink_factor < 1, got "
+                f"{self.grow_factor}/{self.shrink_factor}"
+            )
+
+
+class PoolSizer:
+    """Per-bucket capacity policy driven by queue-depth and utilization
+    EWMAs.  ``observe(group)`` is called once per engine step per bucket;
+    it returns ``(new_capacity, provenance)`` when the bucket should
+    resize (the engine then drains → rebuilds → readmits) or ``None`` to
+    hold.  Provenance carries the EWMAs and raw signals that justified
+    the decision — the serve_load benchmark records it verbatim."""
+
+    def __init__(self, config: Optional[PoolSizerConfig] = None) -> None:
+        self.config = config or PoolSizerConfig()
+        self._queue_ewma: dict = {}
+        self._util_ewma: dict = {}
+        self._cooldown: dict = {}
+
+    def observe(self, group: SlotPool) -> Optional[tuple]:
+        cfg = self.config
+        key = group.key
+        a = cfg.ewma_alpha
+        queued_per_slot = len(group.queue) / max(1, group.capacity)
+        util = group.live / max(1, group.capacity)
+        qe = self._queue_ewma[key] = a * queued_per_slot + (1.0 - a) * (
+            self._queue_ewma.get(key, queued_per_slot)
+        )
+        ue = self._util_ewma[key] = a * util + (1.0 - a) * (
+            self._util_ewma.get(key, util)
+        )
+        cooling = self._cooldown.get(key, 0)
+        if cooling > 0:
+            self._cooldown[key] = cooling - 1
+            return None
+        cap = group.capacity
+        new = action = None
+        if qe > cfg.grow_queue_per_slot and cap < cfg.max_capacity:
+            new = min(
+                cfg.max_capacity,
+                max(cap + 1, int(round(cap * cfg.grow_factor))),
+            )
+            action = "grow"
+        elif (
+            ue < cfg.shrink_utilization
+            and not group.queue
+            and (group.live or group.active)  # idle buckets retire instead
+            and cap > max(cfg.min_capacity, group.live)
+        ):
+            new = max(
+                cfg.min_capacity,
+                group.live,
+                int(round(cap * cfg.shrink_factor)),
+            )
+            action = "shrink"
+        if new is None or new == cap:
+            return None
+        self._cooldown[key] = cfg.cooldown_steps
+        return new, {
+            "action": action,
+            "bucket": f"{key[0]}/{key[1]}",
+            "from_capacity": cap,
+            "to_capacity": new,
+            "queue_depth": len(group.queue),
+            "live": group.live,
+            "queue_ewma": qe,
+            "utilization_ewma": ue,
+        }

@@ -149,6 +149,7 @@ def target_to_dict(target) -> dict:
         "overlap": target.overlap,
         "diagonal": target.diagonal,
         "exchange_every": target.exchange_every,
+        "slot_axis": target.slot_axis,
         "fused_epoch": target.fused_epoch,
         "pallas_interpret": target.pallas_interpret,
         "pallas_tile": list(target.pallas_tile) if target.pallas_tile else None,
@@ -215,6 +216,7 @@ def target_from_dict(d: dict, devices: Optional[Sequence] = None):
         overlap=bool(d.get("overlap", False)),
         diagonal=bool(d.get("diagonal", False)),
         exchange_every=int(d.get("exchange_every", 1)),
+        slot_axis=d.get("slot_axis"),
         fused_epoch=bool(d.get("fused_epoch", False)),
         pallas_interpret=bool(d.get("pallas_interpret", True)),
         pallas_tile=tuple(tile) if tile else None,

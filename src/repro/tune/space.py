@@ -227,6 +227,109 @@ def _local_shape(program, strategy) -> tuple:
 
 
 # --------------------------------------------------------------------------
+# pool widths (slot mesh axis — serving / ensemble batching)
+# --------------------------------------------------------------------------
+
+
+def slot_width_candidates(
+    n_devices: int, spatial_ranks: int, capacity: int
+) -> list:
+    """Feasible slot-axis widths for a pool of ``capacity`` slots over a
+    ``spatial_ranks``-device decomposition: every ``s`` that divides the
+    pool (shard_map needs ``capacity % s == 0``) and fits the inventory
+    (``s * spatial_ranks <= n_devices``), widest first.  Always non-empty
+    — width 1 (the whole pool vmapped inside each spatial shard) is
+    feasible whenever the spatial mesh itself is."""
+    cap = max(1, int(capacity))
+    spatial = max(1, int(spatial_ranks))
+    hi = max(1, min(cap, int(n_devices) // spatial))
+    out = [s for s in range(hi, 0, -1) if cap % s == 0]
+    return out or [1]
+
+
+def enumerate_pool_candidates(
+    program,
+    capacity: int,
+    devices: Optional[Sequence] = None,
+    backends: Sequence[str] = ("jnp",),
+    exchange_every: Sequence[int] = (1,),
+    slot_axis: str = "slot",
+) -> list:
+    """The ROADMAP's ensemble axis as a search space: every way to trade
+    pool (ensemble) batch width against mesh factorization on this
+    inventory.  For each slot width ``s`` dividing ``capacity``, the
+    remaining ``n_devices // s`` devices enumerate spatial strategies
+    (``strategy_candidates``), and each feasible pair becomes a slot-axis
+    ``Target`` whose compiled step advances ``capacity`` same-fingerprint
+    simulations in ONE ``shard_map`` dispatch over ``(slot, *spatial)``.
+
+    Candidates carry ``origin="pool"``; ``describe()`` shows the slot
+    width as ``slots=s``.  Widest slot axis enumerates first — the serve
+    engine takes the head as its default factorization."""
+    import jax
+
+    from repro import api
+
+    devices = list(devices) if devices is not None else jax.devices()
+    cap = max(1, int(capacity))
+    out: list = []
+    seen: set = set()
+    widths = sorted(
+        {s for s in range(1, min(cap, len(devices)) + 1) if cap % s == 0},
+        reverse=True,
+    )
+    for s in widths:
+        n_spatial = len(devices) // s
+        if n_spatial < 1:
+            continue
+        for strategy in strategy_candidates(program, n_spatial):
+            spatial_mesh = (
+                mesh_for_strategy(strategy, devices)
+                if strategy is not None
+                else None
+            )
+            if spatial_mesh is None:
+                # pure-ensemble pool: no spatial decomposition.  The
+                # lowered IR still binds spatial axis names for its
+                # (trivial) exchanges, so the mesh carries them at size 1
+                # alongside the slot axis.
+                import numpy as np
+                from jax.sharding import Mesh
+
+                strategy = api.trivial_strategy(program.rank)
+                shape = (s,) + (1,) * program.rank
+                mesh = Mesh(
+                    np.array(devices[:s]).reshape(shape),
+                    (slot_axis,) + tuple(strategy.axis_names),
+                )
+                kw = dict(mesh=mesh, strategy=strategy, slot_axis=slot_axis)
+            else:
+                from repro.dist.sharding import factor_slot_mesh
+
+                mesh = factor_slot_mesh(
+                    spatial_mesh, s, axis=slot_axis, devices=devices
+                )
+                kw = dict(mesh=mesh, strategy=strategy, slot_axis=slot_axis)
+            ks = exchange_every_candidates(program, strategy, exchange_every)
+            for k in ks:
+                for backend in backends:
+                    try:
+                        t = api.Target(
+                            backend=backend, exchange_every=k, **kw
+                        )
+                        api._validate_for_program(program, t)
+                    except api.TargetError:
+                        continue
+                    if t.fingerprint in seen:
+                        continue
+                    seen.add(t.fingerprint)
+                    out.append(
+                        Candidate(target=t, origin="pool", note=f"slots={s}")
+                    )
+    return out
+
+
+# --------------------------------------------------------------------------
 # the full space
 # --------------------------------------------------------------------------
 

@@ -532,6 +532,127 @@ def scenario_tune_transfer():
     print("ok: tune-transfer")
 
 
+def scenario_slot_axis():
+    """ISSUE 9 tentpole oracle: a slot-axis pooled Target (shard_map over
+    ``(slot, *spatial)``, vmap inside) advances a ``[B, *shape]`` batch
+    bitwise-identically to B per-slot solo dispatches of the spatial-only
+    sibling — for k ∈ {1, 2} and both boundaries, and across slot widths
+    that do (4) and do not (2 with B=4) equal the batch size."""
+    from repro.api import TargetError, pooled_target
+
+    shape = (32, 32)
+    B = 4
+    for boundary, k, slots in (("zero", 1, 4), ("periodic", 2, 2)):
+        prog = _jacobi(shape).finish(boundary=boundary)
+        solo_t = Target(
+            mesh=_mesh((2,), ("x",)), strategy=make_strategy_1d(2),
+            exchange_every=k,
+        )
+        pooled_t = pooled_target(solo_t, slots=slots)
+        assert pooled_t.fingerprint != solo_t.fingerprint
+        assert pooled_t.mesh.shape["slot"] == slots
+        solo = api_compile(prog, solo_t)
+        pooled = api_compile(prog, pooled_t)
+        rng = np.random.default_rng(7)
+        u = rng.standard_normal((B,) + shape).astype(np.float32)
+        got = pooled.time_loop((u,), 8)
+        got = np.asarray(got[0] if isinstance(got, tuple) else got)
+        want = np.stack([
+            np.asarray(
+                (lambda r: r[0] if isinstance(r, tuple) else r)(
+                    solo.time_loop((u[i],), 8)
+                )
+            )
+            for i in range(B)
+        ])
+        check(f"slot-axis-{boundary}-k{k}-s{slots}", got, want)
+    # validation: a slot axis colliding with a spatial axis is rejected
+    try:
+        Target(
+            mesh=_mesh((2,), ("x",)), strategy=make_strategy_1d(2),
+            slot_axis="x",
+        )
+        print("MISSING TargetError for colliding slot_axis")
+        sys.exit(1)
+    except TargetError:
+        print("ok: slot-axis collision rejected")
+
+
+def scenario_serve_pooled():
+    """ISSUE 9 acceptance: a 2-rank distributed bucket with 4 live slots
+    executes as ONE pooled dispatch per engine step (per-bucket counters:
+    batched > 0, solo == 0) and every request's final state is
+    bitwise-equal to its solo ``time_loop``."""
+    from repro.serve.stencil import StencilEngine, StencilEngineConfig
+
+    shape = (32, 32)
+    prog = _jacobi(shape).finish(boundary="periodic")
+    target = Target(mesh=_mesh((2,), ("x",)), strategy=make_strategy_1d(2))
+    rng = np.random.default_rng(3)
+    states = [rng.standard_normal(shape).astype(np.float32) for _ in range(4)]
+    eng = StencilEngine(StencilEngineConfig(slots_per_group=4))
+    # equal n_steps: the bucket stays at 4 live slots every dispatch
+    hs = [eng.submit(prog, (s,), 8, target=target) for s in states]
+    done = eng.run()
+    assert len(done) == 4, len(done)
+    bd = eng.metrics.bucket_dispatches[
+        f"{prog.fingerprint}/{target.fingerprint}"
+    ]
+    assert bd["batched"] > 0 and bd["solo"] == 0, bd
+    solo = api_compile(prog, target)
+    for h, s in zip(hs, states):
+        want = solo.time_loop((s,), 8)
+        want = np.asarray(want[0] if isinstance(want, tuple) else want)
+        check(f"serve-pooled-rid{h.rid}", np.asarray(h.result()[0]), want)
+    print(f"ok: serve-pooled counters {bd}")
+
+
+def scenario_serve_autoscale():
+    """ISSUE 9 acceptance: a queue burst against a small distributed
+    bucket forces ≥1 autoscale grow, the long tail forces ≥1 shrink,
+    every event carries queue-depth/utilization provenance, and every
+    request's final state stays bitwise-equal across the resizes."""
+    from repro.serve.stencil import (
+        PoolSizerConfig,
+        StencilEngine,
+        StencilEngineConfig,
+    )
+
+    shape = (32, 32)
+    prog = _jacobi(shape).finish(boundary="periodic")
+    target = Target(mesh=_mesh((2,), ("x",)), strategy=make_strategy_1d(2))
+    rng = np.random.default_rng(5)
+    states = [rng.standard_normal(shape).astype(np.float32) for _ in range(8)]
+    steps = [8] * 7 + [48]
+    eng = StencilEngine(
+        StencilEngineConfig(
+            slots_per_group=2,
+            autoscale=PoolSizerConfig(
+                min_capacity=1, max_capacity=8, cooldown_steps=1,
+                ewma_alpha=1.0,
+            ),
+        )
+    )
+    hs = [eng.submit(prog, (s,), n, target=target)
+          for s, n in zip(states, steps)]
+    eng.run()
+    auto = eng.metrics.snapshot()["autoscale"]
+    assert auto["grows"] >= 1 and auto["shrinks"] >= 1, auto
+    for e in auto["events"]:
+        missing = {
+            "queue_ewma", "utilization_ewma", "queue_depth", "live",
+            "from_capacity", "to_capacity",
+        } - set(e)
+        assert not missing, f"provenance missing {missing}"
+    solo = api_compile(prog, target)
+    for h, s, n in zip(hs, states, steps):
+        want = solo.time_loop((s,), n)
+        want = np.asarray(want[0] if isinstance(want, tuple) else want)
+        check(f"serve-autoscale-rid{h.rid}", np.asarray(h.result()[0]), want)
+    print(f"ok: serve-autoscale grows={auto['grows']} "
+          f"shrinks={auto['shrinks']}")
+
+
 SCENARIOS = {
     "1d-zero": lambda: scenario_1d("zero"),
     "1d-periodic": lambda: scenario_1d("periodic"),
@@ -576,6 +697,11 @@ SCENARIOS = {
     "resilience-heat-k4": lambda: scenario_resilience_reshape("jacobi", k=4),
     "resilience-wave-k4": lambda: scenario_resilience_reshape("wave", k=4),
     "tune-transfer": scenario_tune_transfer,
+    # ISSUE 9 — elastic slot pools: slot-axis compile oracle, pooled
+    # distributed serving, queue-depth autoscaling (all bitwise vs solo)
+    "slot-axis": scenario_slot_axis,
+    "serve-pooled": scenario_serve_pooled,
+    "serve-autoscale": scenario_serve_autoscale,
 }
 
 

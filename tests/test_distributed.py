@@ -44,6 +44,9 @@ SCENARIOS = [
     "resilience-heat-k4",
     "resilience-wave-k4",
     "tune-transfer",
+    "slot-axis",
+    "serve-pooled",
+    "serve-autoscale",
 ]
 
 

@@ -403,3 +403,268 @@ def test_cache_hit_refreshes_lru_order():
 def test_set_cache_capacity_validates():
     with pytest.raises(ValueError, match=">= 1"):
         api.set_cache_capacity(0)
+
+
+# -------------------------------------------------------------------------
+# ISSUE 9 — run() result, idle retirement, batched row commit
+# -------------------------------------------------------------------------
+
+
+def test_run_returns_only_this_calls_finishes():
+    """Regression: ``run()`` used to return the cumulative
+    ``self.finished``, re-reporting earlier calls' requests."""
+    prog = _heat(name="heat_run_twice")
+    eng = StencilEngine(StencilEngineConfig(slots_per_group=2))
+    h1 = eng.submit(prog, (_rand((16, 16), 0),), n_steps=2)
+    first = eng.run()
+    assert [r.rid for r in first] == [h1.rid]
+    h2 = eng.submit(prog, (_rand((16, 16), 1),), n_steps=2)
+    second = eng.run()
+    assert [r.rid for r in second] == [h2.rid]  # NOT [h1, h2]
+    # the engine-lifetime history still accumulates
+    assert [r.rid for r in eng.finished] == [h1.rid, h2.rid]
+    # an empty run reports nothing
+    assert eng.run() == []
+
+
+def test_idle_buckets_retire_and_free_pooled_state():
+    """Bucket-leak fix: after serving N distinct fingerprints and
+    draining them, idle retirement leaves 0 live pooled arrays and
+    ``buckets_retired == N``; ``total_slots``/``utilization`` stop
+    counting the retired pools."""
+    progs = [_heat(name=f"heat_retire{i}") for i in range(3)]
+    eng = StencilEngine(
+        StencilEngineConfig(slots_per_group=2, bucket_idle_steps=2)
+    )
+    for i, p in enumerate(progs):
+        eng.submit(p, (_rand((16, 16), i),), n_steps=2)
+    eng.run()
+    assert len(eng.scheduler.groups) == 3  # drained but not yet retired
+    eng.step()  # idle step 1
+    assert eng.metrics.buckets_retired == 0
+    eng.step()  # idle step 2 → all three retire
+    assert eng.metrics.buckets_retired == 3
+    assert eng.scheduler.groups == {}
+    assert eng.scheduler.total_slots == 0
+    assert eng.utilization == 0.0
+    assert eng.metrics.snapshot()["buckets_retired"] == 3
+    # a retired fingerprint that returns gets a fresh bucket and works
+    h = eng.submit(progs[0], (_rand((16, 16), 9),), n_steps=2)
+    eng.run()
+    assert h.done
+
+
+def test_bucket_activity_resets_idle_counter():
+    prog = _heat(name="heat_idle_reset")
+    eng = StencilEngine(
+        StencilEngineConfig(slots_per_group=2, bucket_idle_steps=3)
+    )
+    eng.submit(prog, (_rand((16, 16), 0),), n_steps=2)
+    eng.run()
+    eng.step()
+    eng.step()  # 2 idle steps of 3 — still alive
+    assert len(eng.scheduler.groups) == 1
+    eng.submit(prog, (_rand((16, 16), 1),), n_steps=2)  # traffic returns
+    eng.run()
+    assert len(eng.scheduler.groups) == 1  # counter reset, not retired
+    assert eng.metrics.buckets_retired == 0
+
+
+def test_commit_rows_matches_per_slot_write_loop():
+    """The batched row commit (one ``.at[idx].set`` per buffer) lands
+    the same pool state as the old per-slot ``rotate_slot`` loop."""
+    prog = _wave(name="wave_commit_rows")
+    compiled = api.compile(prog, Target())
+    sched_a, sched_b = Scheduler(4), Scheduler(4)
+    ga = sched_a.group_for(compiled)
+    gb = sched_b.group_for(compiled)
+    for slot in range(4):
+        row = (_rand((16, 16), slot), _rand((16, 16), 40 + slot))
+        ga.write_slot(slot, row)
+        gb.write_slot(slot, row)
+    outs = {slot: (_rand((16, 16), 80 + slot),) for slot in (0, 2, 3)}
+    rows = {}
+    for slot, o in outs.items():
+        row = ga.read_slot(slot)
+        rows[slot] = tuple(row[len(o):]) + o
+        gb.rotate_slot(slot, o)  # the old O(capacity) path
+    ga.commit_rows(rows)
+    for pa, pb in zip(ga.state, gb.state):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+# -------------------------------------------------------------------------
+# ISSUE 9 — frame cadence across migration
+# -------------------------------------------------------------------------
+
+
+def test_migrated_request_frame_cadence_with_non_dividing_start_step():
+    """A request admitted mid-run at ``start_step=2`` with
+    ``frame_every=4`` (not dividing the start step) streams at the next
+    cadence marks — 4, 8 — and the landing final frame at 12."""
+    prog = _heat(name="heat_cadence_midrun")
+    eng = StencilEngine()
+    h = eng.submit(
+        prog, (_rand((16, 16), 0),), n_steps=12, frame_every=4,
+        start_step=2,
+    )
+    eng.run()
+    assert [f.step for f in h.frames()] == [4, 8, 12]
+
+
+def test_final_frame_emitted_exactly_once_when_cadence_lands_on_n_steps():
+    prog = _heat(name="heat_final_frame")
+    eng = StencilEngine()
+    seen = []
+    eng.submit(
+        prog, (_rand((16, 16), 0),), n_steps=4, frame_every=2,
+        on_frame=seen.append,
+    )
+    eng.run()
+    assert [f.step for f in seen] == [2, 4]
+    assert sum(1 for f in seen if f.step == 4) == 1
+    assert eng.metrics.frames_emitted == 2
+
+
+def test_frame_steps_strictly_increase_across_evacuate_admit_hop(tmp_path):
+    """Stream cadence survives migration: frames before the hop and
+    frames after readmission (``start_step`` at the evacuated step)
+    form one strictly increasing ``step`` sequence with no repeats."""
+    prog = _heat(name="heat_hop_frames")
+    first = StencilEngine(StencilEngineConfig(slots_per_group=1))
+    h1 = first.submit(
+        prog, (_rand((16, 16), 0),), n_steps=12, frame_every=3
+    )
+    for _ in range(4):  # advance to step 4; frame mark 3 crossed
+        first.step()
+    before = [f.step for f in h1.frames()]
+    assert before == [3]
+    d = str(tmp_path / "hop")
+    first.evacuate(prog.fingerprint, d)
+
+    second = StencilEngine(StencilEngineConfig(slots_per_group=1))
+    (h2,) = second.admit_evacuated(d, prog)
+    assert h2.steps_done == 4
+    second.run()
+    after = [f.step for f in h2.frames()]
+    assert after == [6, 9, 12]  # resumes the schedule, no replay of 3
+    combined = before + after
+    assert combined == sorted(set(combined))  # strictly increasing
+
+
+# -------------------------------------------------------------------------
+# ISSUE 9 — PoolSizer policy
+# -------------------------------------------------------------------------
+
+
+def _sizer_group(name, capacity, live=0, queued=0):
+    from repro.serve.stencil.request import StencilRequest
+
+    compiled = api.compile(_heat(name=name), Target())
+    sched = Scheduler(capacity)
+    group = sched.group_for(compiled)
+    for i in range(live):
+        group.active[i] = StencilRequest(
+            rid=i, program=compiled.program, target=compiled.target,
+            state=(), n_steps=4,
+        )
+    for i in range(queued):
+        group.queue.append(
+            StencilRequest(
+                rid=100 + i, program=compiled.program,
+                target=compiled.target, state=(), n_steps=4,
+            )
+        )
+    return group
+
+
+def test_pool_sizer_grows_on_queue_depth_with_provenance():
+    from repro.serve.stencil import PoolSizer, PoolSizerConfig
+
+    sizer = PoolSizer(PoolSizerConfig(max_capacity=16, ewma_alpha=1.0))
+    group = _sizer_group("heat_sizer_grow", capacity=2, live=2, queued=4)
+    new, prov = sizer.observe(group)
+    assert new == 4 and prov["action"] == "grow"
+    assert prov["queue_depth"] == 4 and prov["live"] == 2
+    assert prov["queue_ewma"] == pytest.approx(2.0)
+    assert prov["from_capacity"] == 2 and prov["to_capacity"] == 4
+
+
+def test_pool_sizer_shrinks_on_low_utilization_never_below_live():
+    from repro.serve.stencil import PoolSizer, PoolSizerConfig
+
+    sizer = PoolSizer(
+        PoolSizerConfig(min_capacity=1, ewma_alpha=1.0, cooldown_steps=0)
+    )
+    group = _sizer_group("heat_sizer_shrink", capacity=8, live=1, queued=0)
+    new, prov = sizer.observe(group)
+    assert prov["action"] == "shrink"
+    assert new == 4  # 8 * 0.5, still >= live
+    assert prov["utilization_ewma"] == pytest.approx(0.125)
+    group2 = _sizer_group("heat_sizer_floor", capacity=8, live=3, queued=0)
+    sizer2 = PoolSizer(
+        PoolSizerConfig(
+            min_capacity=1, ewma_alpha=1.0, cooldown_steps=0,
+            shrink_factor=0.25, shrink_utilization=0.5,
+        )
+    )
+    new2, _ = sizer2.observe(group2)
+    assert new2 == 3  # 8 * 0.25 = 2 would strand a live request
+
+
+def test_pool_sizer_cooldown_hysteresis_blocks_back_to_back_resizes():
+    from repro.serve.stencil import PoolSizer, PoolSizerConfig
+
+    sizer = PoolSizer(
+        PoolSizerConfig(max_capacity=64, ewma_alpha=1.0, cooldown_steps=2)
+    )
+    group = _sizer_group("heat_sizer_cool", capacity=2, live=2, queued=8)
+    assert sizer.observe(group) is not None  # resize fires
+    # pressure persists, but the cooldown holds the width for 2 steps
+    assert sizer.observe(group) is None
+    assert sizer.observe(group) is None
+    assert sizer.observe(group) is not None  # cooldown expired
+
+
+def test_pool_sizer_holds_idle_and_steady_buckets():
+    from repro.serve.stencil import PoolSizer, PoolSizerConfig
+
+    sizer = PoolSizer(PoolSizerConfig(ewma_alpha=1.0, cooldown_steps=0))
+    # idle bucket: retirement's job, not the sizer's
+    idle = _sizer_group("heat_sizer_idle", capacity=4, live=0, queued=0)
+    assert sizer.observe(idle) is None
+    # healthy utilization, empty queue: hold
+    steady = _sizer_group("heat_sizer_steady", capacity=4, live=3, queued=0)
+    assert sizer.observe(steady) is None
+
+
+def test_autoscaled_engine_results_stay_bitwise_across_resizes():
+    """Single-device autoscaling end-to-end: a burst grows the bucket,
+    the tail shrinks it, and every result matches solo time_loop
+    bitwise (the distributed variant runs in dist_worker)."""
+    from repro.serve.stencil import PoolSizerConfig
+
+    prog = _heat(name="heat_autoscale_e2e")
+    eng = StencilEngine(
+        StencilEngineConfig(
+            slots_per_group=2,
+            autoscale=PoolSizerConfig(
+                min_capacity=1, max_capacity=8, ewma_alpha=1.0,
+                cooldown_steps=1,
+            ),
+        )
+    )
+    states = [_rand((16, 16), 60 + i) for i in range(8)]
+    steps = [4] * 7 + [40]
+    handles = [
+        eng.submit(prog, (s,), n) for s, n in zip(states, steps)
+    ]
+    eng.run()
+    auto = eng.metrics.snapshot()["autoscale"]
+    assert auto["grows"] >= 1 and auto["shrinks"] >= 1, auto
+    solo = api.compile(prog, Target())
+    for h, s, n in zip(handles, states, steps):
+        want = solo.time_loop((s,), n)
+        want = want if isinstance(want, tuple) else (want,)
+        for w, o in zip(want, h.result()):
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(o))

@@ -457,3 +457,39 @@ def test_jnp_backend_ignores_tile_shape():
     api._validate_for_program(
         prog, Target(backend="jnp", pallas_tile=(7, 5))
     )
+
+
+# -------------------------------------------------------------------------
+# ISSUE 9 — slot-pool width enumeration (ensemble axis)
+# -------------------------------------------------------------------------
+
+
+def test_slot_width_candidates_divide_capacity_and_fit_inventory():
+    from repro.tune.space import slot_width_candidates
+
+    assert slot_width_candidates(8, 2, 4) == [4, 2, 1]
+    assert slot_width_candidates(8, 4, 6) == [2, 1]  # 6 devices short of 3×4
+    assert slot_width_candidates(8, 2, 6) == [3, 2, 1]  # 4 ∤ 6 dropped
+    assert slot_width_candidates(1, 1, 4) == [1]  # single device still pools
+    for s in slot_width_candidates(16, 2, 12):
+        assert 12 % s == 0 and s * 2 <= 16
+
+
+def test_enumerate_pool_candidates_single_device():
+    """On a 1-device inventory the pool space degenerates to the
+    pure-ensemble slot-axis candidate (trivial spatial grid at width 1)
+    — still a valid, compilable slot-axis Target."""
+    from repro.tune.space import enumerate_pool_candidates
+
+    prog = _jacobi_prog(name="tune_pool_1dev")
+    cands = enumerate_pool_candidates(prog, capacity=4)
+    assert cands, "always at least the width-1 pool"
+    for c in cands:
+        assert c.origin == "pool"
+        assert c.target.slot_axis == "slot"
+        assert "slot" in c.target.mesh.axis_names
+        assert c.note.startswith("slots=")
+    # fingerprints are unique and differ from the solo target's
+    fps = [c.fingerprint for c in cands]
+    assert len(fps) == len(set(fps))
+    assert Target().fingerprint not in fps
