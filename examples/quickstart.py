@@ -94,6 +94,27 @@ def main() -> None:
     print(f"peak: {u0.max():.3f} -> {uT.max():.3f} (diffused)")
     assert np.isfinite(uT).all()
 
+    # -- observability: trace one epoch + drift check (DESIGN.md §12) ------
+    # obs.enable() switches time_loop to a per-epoch traced path (bitwise
+    # equal, slower) so compile/dispatch/comm/compute spans land on one
+    # timeline; write_chrome exports it for Perfetto, and drift_report
+    # compares the measured epoch against the roofline model.
+    from repro import obs
+
+    obs.enable()
+    obs.clear()
+    step.time_loop([jnp.asarray(u0)], 2 * k)
+    rep = obs.drift_report(terms=step.cost(), exchange_every=k)
+    trace_path = obs.write_chrome("results/quickstart_trace.json")
+    obs.disable()
+    counts = {}
+    for s in obs.spans():
+        counts[s.cat] = counts.get(s.cat, 0) + 1
+    print(f"traced {sum(counts.values())} spans {counts} -> {trace_path}")
+    print(rep)
+    print(f"unified counters: { {ns: len(v) for ns, v in obs.snapshot().items()} }")
+    obs.clear()
+
     # -- serving: many tenants, one engine (DESIGN.md §9) ------------------
     # StencilEngine batches same-fingerprint requests into ONE vmapped
     # dispatch over a slot pool; results stay bitwise-equal to the solo

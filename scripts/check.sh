@@ -395,6 +395,69 @@ print(f"elastic-serve smoke OK: bucket counters {bd}, "
       "all results bitwise-equal")
 EOF
 
+echo "== obs smoke =="
+python - <<'EOF'
+# ISSUE 10: a traced 8-step heat run (k=4, two epochs) must export a
+# valid Chrome trace with >= 1 epoch span per epoch, a drift report
+# against the roofline model, and a unified obs.snapshot() covering all
+# five counter namespaces.  The traced time_loop runs the epoch body
+# eagerly (spans per epoch), which may differ from the fused fori_loop
+# by one ulp on a single device (FMA fusion) — the distributed traced
+# path is checked bitwise in tests/dist_worker.py obs-trace-2rank.
+import json
+import os
+
+import numpy as np
+
+from repro import api, obs
+
+from repro.frontends.devito_like import Eq, Grid, Operator, TimeFunction
+
+grid = Grid(shape=(64, 64), extent=(1.0, 1.0))
+u = TimeFunction(name="u", grid=grid, space_order=2)
+dt = 0.8 * grid.spacing[0] ** 2 / (4 * 0.5)
+prog = Operator(Eq(u.dt, 0.5 * u.laplace), dt=dt, boundary="zero").program
+tgt = api.Target(exchange_every=4)
+step = api.compile(prog, tgt)
+rng = np.random.default_rng(0)
+u0 = rng.standard_normal((64, 64)).astype(np.float32)
+
+want = step.time_loop((u0,), 8)
+want = np.asarray(want[0] if isinstance(want, tuple) else want)
+obs.enable()
+obs.clear()
+got = step.time_loop((u0,), 8)
+got = np.asarray(got[0] if isinstance(got, tuple) else got)
+rep = obs.drift_report(terms=step.cost(), exchange_every=4)
+obs.disable()
+assert np.allclose(got, want, rtol=1e-6, atol=1e-6), (
+    f"traced time_loop diverged: max abs diff {np.abs(got - want).max()}"
+)
+
+epochs = [s for s in obs.spans() if s.name == "epoch"]
+assert len(epochs) == 2, f"expected 2 epoch spans, got {len(epochs)}"
+assert rep.epochs == 2 and rep.measured_step_s > 0, rep.as_dict()
+assert rep.modeled_step_s > 0 and rep.drift_ratio > 0, rep.as_dict()
+
+os.makedirs("results/bench", exist_ok=True)
+path = obs.write_chrome("results/bench/obs_smoke_trace.json")
+with open(path) as f:
+    doc = json.load(f)
+xs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+assert xs and all(
+    {"name", "cat", "ts", "dur", "pid", "tid"} <= set(e) for e in xs
+), "invalid Chrome trace events"
+assert any(e["name"] == "epoch" for e in xs)
+
+snap = obs.snapshot()
+missing = {"compile", "kernel", "serve", "checkpoint", "tune"} - set(snap)
+assert not missing, f"snapshot missing namespaces {missing}"
+obs.clear()
+print(f"obs smoke OK: {len(xs)} trace events -> {path}, "
+      f"drift {rep.drift_ratio:.3g}x over {rep.epochs} epochs, "
+      f"snapshot namespaces {sorted(snap)}")
+EOF
+
 if [[ "${1:-}" == "--smoke" ]]; then
   echo "smoke only: skipping tier-1 tests"
   exit 0

@@ -11,6 +11,7 @@ API is touched).
 
 __all__ = [
     "api",
+    "obs",
     "tune",
     "resilience",
     "Program",
@@ -26,6 +27,10 @@ __all__ = [
 
 
 def __getattr__(name: str):
+    if name == "obs":
+        import repro.obs as obs
+
+        return obs
     if name == "tune":
         import repro.tune as tune
 

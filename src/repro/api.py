@@ -48,6 +48,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import ir
 from repro.core.dialects import stencil
 from repro.core.lowering import StencilInterpreter
+from repro.obs import trace as _obs
 from repro.core.passes import (
     PassManager,
     PipelineContext,
@@ -534,6 +535,14 @@ class CompiledStencil:
         one call advances a whole k-step epoch.  A slot-axis target takes
         (and allocates) ``[B, *field_shape]`` arrays — one pooled call
         advances ``B`` independent simulations."""
+        return self._step_over(self._fn, dtype)
+
+    def _step_over(self, call: Callable, dtype=None) -> Callable:
+        """``step()``'s input-only calling convention wrapped around an
+        arbitrary executable of the full field signature — ``self._fn``
+        for the jitted step, ``self._raw_fn`` for the traced eager path
+        (``repro.obs``: the interpreter re-executes per epoch, so
+        exchange/apply spans land once per epoch, not once per trace)."""
         outs = set(self._out_indices)
         pooled = self.target.slot_axis is not None
 
@@ -549,9 +558,20 @@ class CompiledStencil:
             ]
             rest = list(it)
             assert not rest, f"{len(rest)} extra input arrays"
-            return self._fn(*args)
+            return call(*args)
 
         return fn
+
+    @property
+    def _n_ranks(self) -> int:
+        mesh = self.target.mesh
+        if mesh is None:
+            return 1
+        n = 1
+        for name in mesh.axis_names:
+            if name != self.target.slot_axis:
+                n *= int(mesh.shape[name])
+        return n
 
     def epochs(self, n_steps: int) -> int:
         """``n_steps`` time steps as a whole number of epochs of this
@@ -574,8 +594,17 @@ class CompiledStencil:
         time steps — exactly one iteration of ``time_loop``'s body, exposed
         so epoch-granular drivers (``repro.resilience.ResilientLoop``, the
         serve engine) and the fori-loop driver share one rotation rule."""
-        outs = self.step()(*state)
-        outs = outs if isinstance(outs, tuple) else (outs,)
+        if _obs.enabled():
+            with _obs.span("epoch", cat="dispatch", rank=None,
+                           program=self.program.name,
+                           k=self.target.exchange_every,
+                           ranks=self._n_ranks):
+                outs = self.step()(*state)
+                outs = outs if isinstance(outs, tuple) else (outs,)
+                jax.block_until_ready(outs)
+        else:
+            outs = self.step()(*state)
+            outs = outs if isinstance(outs, tuple) else (outs,)
         return tuple(state[len(outs):]) + tuple(outs)
 
     def time_loop(self, state: Sequence[Any], n_steps: int, unroll: int = 1):
@@ -585,10 +614,35 @@ class CompiledStencil:
         ``n_steps`` always counts single time steps regardless of the
         target's ``exchange_every``: the loop runs ``self.epochs(n_steps)``
         epochs.  For a checkpointable / fault-tolerant loop with the same
-        arithmetic, see ``repro.resilience.ResilientLoop``."""
+        arithmetic, see ``repro.resilience.ResilientLoop``.
+
+        With tracing on (``repro.obs``) the fori-loop is replaced by a
+        host-driven epoch loop over the *eager* (unjitted) executable:
+        each epoch re-executes the interpreter, so every epoch records
+        its own exchange window and apply spans with real wall-clock
+        timestamps — the timeline `lax.fori_loop`'s single trace cannot
+        produce.  Same arithmetic, host-loop dispatch overhead applies
+        (the resilience driver proved the python-epoch loop equivalent
+        in PR 8); benchmark numbers should be taken untraced."""
+        if _obs.enabled():
+            return self._traced_time_loop(tuple(state), n_steps)
         return time_loop(
             self.step(), tuple(state), self.epochs(n_steps), unroll=unroll
         )
+
+    def _traced_time_loop(self, state: tuple, n_steps: int) -> tuple:
+        n_epochs = self.epochs(n_steps)
+        k = self.target.exchange_every
+        step = self._step_over(self._raw_fn)
+        for e in range(n_epochs):
+            with _obs.span("epoch", cat="dispatch", rank=None,
+                           program=self.program.name, epoch=e,
+                           step_begin=e * k, k=k, ranks=self._n_ranks):
+                outs = step(*state)
+                outs = outs if isinstance(outs, tuple) else (outs,)
+                jax.block_until_ready(outs)
+            state = tuple(state[len(outs):]) + tuple(outs)
+        return state
 
     # -- inspection ------------------------------------------------------
     @property
@@ -832,6 +886,12 @@ def compile(
             "run rewrites on the FuncOp first, then wrap it in a Program"
         )
     key = ("compile", program.fingerprint, target.fingerprint)
+    if _obs.enabled():
+        with _LOCK:
+            hit = key in _CACHE
+        with _obs.span("api.compile", cat="compile", program=program.name,
+                       cache="hit" if hit else "miss"):
+            return _cached(key, lambda: _build(program, target))
     return _cached(key, lambda: _build(program, target))
 
 
@@ -991,6 +1051,12 @@ def partition_specs(program: Program, strategy: SlicingStrategy) -> list:
 
 
 def _build(program: Program, target: Target) -> CompiledStencil:
+    with _obs.span("api.build", cat="compile", program=program.name,
+                   backend=target.backend, k=target.exchange_every):
+        return _build_inner(program, target)
+
+
+def _build_inner(program: Program, target: Target) -> CompiledStencil:
     strategy = target.strategy or trivial_strategy(program.rank)
     spec = target.pipeline_spec()
     ctx = PipelineContext(

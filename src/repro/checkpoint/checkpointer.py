@@ -63,9 +63,26 @@ class CheckpointStats:
     saves: int = 0
     prunes: int = 0
     gcs: int = 0
+    restores: int = 0
 
     def as_dict(self) -> dict:
-        return {"saves": self.saves, "prunes": self.prunes, "gcs": self.gcs}
+        return {
+            "saves": self.saves,
+            "prunes": self.prunes,
+            "gcs": self.gcs,
+            "restores": self.restores,
+        }
+
+
+# Process-wide mirror for ``repro.obs.snapshot()``'s ``checkpoint.*``
+# namespace: every instance bump also lands here (``_bump``), so the
+# unified registry sees checkpoint traffic without holding references to
+# short-lived Checkpointer instances.
+_GLOBAL_STATS = CheckpointStats()
+
+
+def global_stats() -> CheckpointStats:
+    return _GLOBAL_STATS
 
 
 class Checkpointer:
@@ -86,6 +103,11 @@ class Checkpointer:
         self._thread: Optional[threading.Thread] = None
         self._startup_gc()
 
+    def _bump(self, field: str) -> None:
+        # per-instance truth plus the process-wide mirror obs reads
+        setattr(self.stats, field, getattr(self.stats, field) + 1)
+        setattr(_GLOBAL_STATS, field, getattr(_GLOBAL_STATS, field) + 1)
+
     def _startup_gc(self) -> None:
         """Remove leftovers of a preempted writer: ``step_*.tmp`` staging
         dirs and ``step_*`` dirs missing their COMMITTED marker.  A torn
@@ -95,12 +117,12 @@ class Checkpointer:
             path = os.path.join(self.dir, name)
             if re.fullmatch(r"step_\d+\.tmp", name):
                 shutil.rmtree(path, ignore_errors=True)
-                self.stats.gcs += 1
+                self._bump("gcs")
             elif re.fullmatch(r"step_\d+", name) and not os.path.exists(
                 os.path.join(path, "COMMITTED")
             ):
                 shutil.rmtree(path, ignore_errors=True)
-                self.stats.gcs += 1
+                self._bump("gcs")
 
     # -- save ------------------------------------------------------------
     def save(
@@ -139,7 +161,7 @@ class Checkpointer:
                 f.write("ok")
             shutil.rmtree(path, ignore_errors=True)
             os.rename(tmp, path)
-            self.stats.saves += 1
+            self._bump("saves")
             self._gc()
 
         if blocking:
@@ -159,7 +181,7 @@ class Checkpointer:
             shutil.rmtree(
                 os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True
             )
-            self.stats.prunes += 1
+            self._bump("prunes")
 
     # -- restore ----------------------------------------------------------
     def available_steps(self) -> list:
@@ -212,4 +234,5 @@ class Checkpointer:
         leaves = [
             loaded["/".join(_path_token(p) for p in path)] for path, _ in paths
         ]
+        self._bump("restores")
         return jax.tree_util.tree_unflatten(treedef, leaves)

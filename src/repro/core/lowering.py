@@ -41,6 +41,7 @@ from jax import lax
 
 from repro.core import ir
 from repro.core.dialects import comm, dmp, stencil
+from repro.obs import trace as _obs
 
 # Backwards-compatible re-export: the lowering pass moved to core/passes.
 from repro.core.passes.lower_comm import lower_dmp_to_comm  # noqa: F401
@@ -181,6 +182,14 @@ class StencilInterpreter:
         for op in func.body.ops:
             if isinstance(op, stencil.StoreOp) and op.field not in self.output_fields:
                 self.output_fields.append(op.field)
+        # obs: one track is traced for every rank (SPMD), tagged with the
+        # rank count so the exporter can replicate spans honestly
+        self._n_ranks = 1
+        for n in self.axis_sizes.values():
+            self._n_ranks *= int(n)
+        # open exchange windows: ExchangeStartOp result -> obs token,
+        # closed by the WaitOp consuming that patch (reset per call)
+        self._open_exchanges: dict = {}
 
     # -- public --------------------------------------------------------
     def __call__(self, *arrays):
@@ -191,6 +200,7 @@ class StencilInterpreter:
         )
         env: dict[ir.SSAValue, Any] = {}
         field_state: dict[ir.SSAValue, Any] = {}
+        self._open_exchanges = {}
         for arg, arr in zip(fields, arrays):
             expect = arg.type.bounds.shape
             assert tuple(arr.shape) == tuple(expect), (
@@ -211,7 +221,14 @@ class StencilInterpreter:
             rb = op.result_bounds
             arrays = [env[o] for o in op.operands]
             origins = [o.type.bounds.lb for o in op.operands]
-            outs = self._apply_backend(op, arrays, origins, rb)
+            if _obs.enabled():
+                part = op.attributes.get("part")
+                name = f"apply:{part.value if part is not None else 'full'}"
+                with _obs.span(name, cat="compute", rank=None,
+                               ranks=self._n_ranks, shape=list(rb.shape)):
+                    outs = self._apply_backend(op, arrays, origins, rb)
+            else:
+                outs = self._apply_backend(op, arrays, origins, rb)
             for res, arr in zip(op.results, outs):
                 env[res] = arr
         elif isinstance(op, stencil.CombineOp):
@@ -237,12 +254,28 @@ class StencilInterpreter:
             env[op.results[0]] = _exec_halo_pad(op, env[op.operands[0]])
         elif isinstance(op, comm.ExchangeStartOp):
             env[op.results[0]] = self._exec_comm_start(op, env[op.temp])
+            if _obs.enabled():
+                # the exchange window closes at the wait consuming this
+                # patch; putting it on the comm lane lets Perfetto show
+                # it overlapping the interior apply that hides it
+                self._open_exchanges[op.results[0]] = _obs.begin_window(
+                    "comm.exchange", cat="comm", rank=None,
+                    ranks=self._n_ranks, size=list(op.size),
+                )
         elif isinstance(op, comm.WaitOp):
             self._exec_comm_wait(op, env)
+            if _obs.enabled():
+                for p in op.patches:
+                    _obs.end_window(self._open_exchanges.pop(p, None))
         elif isinstance(op, comm.BoundaryMaskOp):
             env[op.results[0]] = self._exec_boundary_mask(op, env[op.temp])
         elif isinstance(op, stencil.FusedEpochOp):
-            self._exec_fused_epoch(op, env)
+            if _obs.enabled():
+                with _obs.span("fused_epoch", cat="compute", rank=None,
+                               ranks=self._n_ranks, backend=self.backend):
+                    self._exec_fused_epoch(op, env)
+            else:
+                self._exec_fused_epoch(op, env)
         elif isinstance(op, comm.AllReduceOp):
             v = env[op.operands[0]]
             red = {"sum": lax.psum, "max": lax.pmax, "min": lax.pmin}[op.op]

@@ -27,34 +27,77 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import threading
 import time
 from typing import Callable, Optional, Sequence
 
 from repro.core import ir
+from repro.obs import trace as _obs
+
+# Process-wide pipeline tally, read through the ``PassManager.<attr>``
+# class shim below.  ``repro.api``'s compile cache is judged against
+# ``runs_completed`` (a cache hit must not bump it), and the
+# ``python -m repro.core.passes`` dump surfaces ``last_timings``.
+_RUNS_LOCK = threading.Lock()
+_RUNS_COMPLETED = 0
+_LAST_TIMINGS: list = []
 
 
-class PassManager:
-    # Process-wide counters: how many pipelines ran, and the timings of the
-    # most recent one.  ``repro.api``'s compile cache is judged against
-    # ``runs_completed`` (a cache hit must not bump it), and the
-    # ``python -m repro.core.passes`` dump surfaces ``last_timings``.
-    runs_completed: int = 0
-    last_timings: list = []
+class _PassManagerMeta(type):
+    """Class-attribute shim: ``PassManager.runs_completed`` /
+    ``.last_timings`` used to be class-level *mutable* state, which
+    misattributed timings when compiles interleave (the serve engine
+    compiles pooled siblings mid-step from worker threads).  The real
+    counters are now per-instance; these properties keep the class-level
+    reads (scripts/check.sh, ``python -m repro.core.passes``) meaning
+    "process-wide totals"."""
 
+    @property
+    def runs_completed(cls) -> int:
+        return _RUNS_COMPLETED
+
+    @runs_completed.setter
+    def runs_completed(cls, value: int) -> None:
+        global _RUNS_COMPLETED
+        with _RUNS_LOCK:
+            _RUNS_COMPLETED = int(value)
+
+    @property
+    def last_timings(cls) -> list:
+        return list(_LAST_TIMINGS)
+
+    @last_timings.setter
+    def last_timings(cls, value: list) -> None:
+        global _LAST_TIMINGS
+        with _RUNS_LOCK:
+            _LAST_TIMINGS = list(value)
+
+
+class PassManager(metaclass=_PassManagerMeta):
     def __init__(self, passes: Sequence[Callable], verify: bool = True) -> None:
         self.passes = list(passes)
         self.verify = verify
         self.timings: list[tuple[str, float]] = []
+        # instance-level mirrors of the process-wide tally: how many times
+        # THIS manager ran, and its most recent run's timings
+        self.runs_completed = 0
+        self.last_timings: list = []
 
     def run(
         self,
         func: ir.FuncOp,
         after_each: Optional[Callable[[str, ir.FuncOp], None]] = None,
     ) -> ir.FuncOp:
+        global _RUNS_COMPLETED, _LAST_TIMINGS
+        traced = _obs.enabled()
         for p in self.passes:
             name = getattr(p, "__name__", repr(p))
             t0 = time.perf_counter()
-            out = p(func)
+            if traced:
+                with _obs.span(f"pass:{name}", cat="compile"):
+                    out = p(func)
+            else:
+                out = p(func)
             if isinstance(out, ir.FuncOp):
                 func = out
             self.timings.append((name, time.perf_counter() - t0))
@@ -62,8 +105,11 @@ class PassManager:
                 ir.verify_module(func)
             if after_each is not None:
                 after_each(name, func)
-        PassManager.runs_completed += 1
-        PassManager.last_timings = list(self.timings)
+        self.runs_completed += 1
+        self.last_timings = list(self.timings)
+        with _RUNS_LOCK:
+            _RUNS_COMPLETED += 1
+            _LAST_TIMINGS = list(self.timings)
         return func
 
 

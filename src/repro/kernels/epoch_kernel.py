@@ -37,6 +37,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.dialects import comm, stencil
 from repro.kernels import _DISPATCH
+from repro.obs import trace as _obs
 from repro.kernels.stencil_apply import choose_tile
 
 
@@ -231,15 +232,17 @@ def run_epoch_pallas(
     pallas_call per fused epoch (counted in ``kernels.dispatch_stats``)."""
     if not fused_op.results:
         return []
-    call = build_epoch_kernel(
-        fused_op,
-        [tuple(m.shape) for m in masks],
-        tile=tile,
-        interpret=interpret,
-    )
-    _DISPATCH.fused_epoch_calls += 1
-    out = call(
-        *[a.astype(jnp.float32) for a in arrays],
-        *[m.astype(jnp.float32) for m in masks],
-    )
+    with _obs.span("pallas:fused_epoch", cat="kernel", rank=None,
+                   interpret=interpret):
+        call = build_epoch_kernel(
+            fused_op,
+            [tuple(m.shape) for m in masks],
+            tile=tile,
+            interpret=interpret,
+        )
+        _DISPATCH.fused_epoch_calls += 1
+        out = call(
+            *[a.astype(jnp.float32) for a in arrays],
+            *[m.astype(jnp.float32) for m in masks],
+        )
     return list(out) if isinstance(out, (tuple, list)) else [out]

@@ -32,6 +32,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.dialects import stencil
 from repro.kernels import _DISPATCH
+from repro.obs import trace as _obs
 
 
 VMEM_BUDGET_BYTES = 4 * 1024 * 1024  # per-operand working-set target
@@ -175,14 +176,16 @@ def run_apply_pallas(
 ) -> list:
     """Entry point used by the lowering's pallas backend.  Each call is
     one traced pallas_call (counted in ``kernels.dispatch_stats``)."""
-    call = build_apply_kernel(
-        apply_op,
-        [tuple(a.shape) for a in arrays],
-        origins,
-        result_bounds,
-        tile=tile,
-        interpret=interpret,
-    )
-    _DISPATCH.apply_calls += 1
-    out = call(*[a.astype(jnp.float32) for a in arrays])
+    with _obs.span("pallas:apply", cat="kernel", rank=None,
+                   interpret=interpret):
+        call = build_apply_kernel(
+            apply_op,
+            [tuple(a.shape) for a in arrays],
+            origins,
+            result_bounds,
+            tile=tile,
+            interpret=interpret,
+        )
+        _DISPATCH.apply_calls += 1
+        out = call(*[a.astype(jnp.float32) for a in arrays])
     return list(out) if isinstance(out, (tuple, list)) else [out]

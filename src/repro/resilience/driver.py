@@ -31,10 +31,12 @@ from __future__ import annotations
 import time
 from typing import Any, Optional, Sequence
 
+import jax
 import numpy as np
 
 from repro import api
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.obs import trace as _obs
 from repro.resilience.faults import FaultPlan, SimulatedFault
 
 
@@ -163,8 +165,16 @@ class ResilientLoop:
                 raise
         if self._epoch_fn is None:
             self._epoch_fn = self.compiled.step()
-        outs = self._epoch_fn(*self.state)
-        outs = outs if isinstance(outs, tuple) else (outs,)
+        if _obs.enabled():
+            with _obs.span("epoch", cat="dispatch", rank=None,
+                           program=self.program.name, epoch=e, step_begin=step,
+                           k=self.k, ranks=self.compiled._n_ranks):
+                outs = self._epoch_fn(*self.state)
+                outs = outs if isinstance(outs, tuple) else (outs,)
+                jax.block_until_ready(outs)
+        else:
+            outs = self._epoch_fn(*self.state)
+            outs = outs if isinstance(outs, tuple) else (outs,)
         self.state = tuple(self.state[len(outs):]) + tuple(outs)
         self._phase = (self._phase + len(outs)) % max(1, len(self.state))
         self.step_count += self.k
@@ -195,9 +205,12 @@ class ResilientLoop:
             "target_fingerprint": self.compiled.target.fingerprint,
         }
         t0 = time.perf_counter()
-        self.checkpointer.save(
-            self.step_count, tree, blocking=not self.async_saves, extra=extra
-        )
+        with _obs.span("checkpoint.save", cat="checkpoint",
+                       step=self.step_count, blocking=not self.async_saves):
+            self.checkpointer.save(
+                self.step_count, tree, blocking=not self.async_saves,
+                extra=extra,
+            )
         self.events.append(
             ("checkpoint", self.step_count, time.perf_counter() - t0)
         )
@@ -278,7 +291,9 @@ def resume(
     tree_like = {
         "state": {f"b{i}": np.zeros(()) for i in range(n_bufs)}
     }
-    restored = ckpt.restore(tree_like, step=saved_step)
+    with _obs.span("checkpoint.restore", cat="checkpoint", step=saved_step,
+                   program=program.name):
+        restored = ckpt.restore(tree_like, step=saved_step)
     state = tuple(restored["state"][f"b{i}"] for i in range(n_bufs))
     loop = ResilientLoop(
         program,

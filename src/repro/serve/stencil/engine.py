@@ -59,6 +59,7 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 
 from repro import api
+from repro.obs import trace as _obs
 from repro.serve.stencil.metrics import EngineMetrics, StepMetrics
 from repro.serve.stencil.request import (
     DONE,
@@ -206,6 +207,11 @@ class StencilEngine:
         a solo fallback), stream frames, reclaim + refill finished slots,
         retire idle buckets."""
         self.engine_step_count += 1
+        with _obs.span("engine.step", cat="serve",
+                       step=self.engine_step_count):
+            return self._step_inner()
+
+    def _step_inner(self) -> StepMetrics:
         if self.sizer is not None:
             self._autoscale()
         batched = solo = steps_advanced = 0
@@ -228,10 +234,12 @@ class StencilEngine:
             dispatched = False
             if pooled_fn is not None:
                 try:
-                    t0 = time.perf_counter()
-                    outs = pooled_fn(*group.state)
-                    outs = outs if isinstance(outs, tuple) else (outs,)
-                    jax.block_until_ready(outs)
+                    with _obs.span("dispatch:pooled", cat="serve",
+                                   bucket=bucket, live=len(live)):
+                        t0 = time.perf_counter()
+                        outs = pooled_fn(*group.state)
+                        outs = outs if isinstance(outs, tuple) else (outs,)
+                        jax.block_until_ready(outs)
                 except Exception:
                     if not group.compiled.target.distributed:
                         raise
@@ -255,10 +263,12 @@ class StencilEngine:
                 # buffered and committed in ONE batched write per buffer
                 rows = {}
                 for slot, _ in live:
-                    t0 = time.perf_counter()
-                    outs = group.compiled.step()(*group.read_slot(slot))
-                    outs = outs if isinstance(outs, tuple) else (outs,)
-                    jax.block_until_ready(outs)
+                    with _obs.span("dispatch:solo", cat="serve",
+                                   bucket=bucket, slot=slot):
+                        t0 = time.perf_counter()
+                        outs = group.compiled.step()(*group.read_slot(slot))
+                        outs = outs if isinstance(outs, tuple) else (outs,)
+                        jax.block_until_ready(outs)
                     self.metrics.record_dispatch(
                         bucket, time.perf_counter() - t0
                     )
@@ -321,7 +331,12 @@ class StencilEngine:
         final state stays bitwise-equal to an unmigrated run."""
         from repro.resilience.migrate import evacuate as _evacuate
 
-        return _evacuate(self, program_fingerprint, directory)
+        with _obs.span("engine.evacuate", cat="serve",
+                       program=program_fingerprint):
+            evacuated = _evacuate(self, program_fingerprint, directory)
+        if evacuated:
+            _obs.instant("evacuated", cat="serve", count=len(evacuated))
+        return evacuated
 
     def admit_evacuated(self, directory: str, programs, target=None) -> list:
         """Admit the requests another engine evacuated into ``directory``;
@@ -330,7 +345,11 @@ class StencilEngine:
         request (e.g. onto this engine's mesh).  Returns new handles."""
         from repro.resilience.migrate import admit as _admit
 
-        return _admit(self, directory, programs, target=target)
+        with _obs.span("engine.admit_evacuated", cat="serve"):
+            admitted = _admit(self, directory, programs, target=target)
+        if admitted:
+            _obs.instant("admitted", cat="serve", count=len(admitted))
+        return admitted
 
     @property
     def utilization(self) -> float:
@@ -368,7 +387,11 @@ class StencilEngine:
             if decision is None:
                 continue
             new_capacity, provenance = decision
-            self.resize_bucket(group, new_capacity)
+            bucket = f"{group.key[0]}/{group.key[1]}"
+            with _obs.span("pool.resize", cat="serve", bucket=bucket,
+                           action=provenance.get("action"),
+                           to_capacity=int(new_capacity)):
+                self.resize_bucket(group, new_capacity)
             provenance["engine_step"] = self.engine_step_count
             self.metrics.record_autoscale(provenance)
 

@@ -17,10 +17,36 @@ epoch is directly comparable against its unfused sibling in the same
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from collections import deque
 from typing import Optional
 
 from repro import api
+
+# Live EngineMetrics instances, for the process-wide ``serve.*`` view in
+# ``repro.obs.snapshot()``.  A weak set: a retired engine's metrics are
+# garbage like the engine itself — aggregation only ever sums the living.
+_LIVE: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def global_counters() -> dict:
+    """Summed counters over every live engine in this process — the
+    ``serve`` namespace of ``repro.obs.snapshot()``.  Per-instance
+    ``EngineMetrics`` objects stay the source of truth; this is a read."""
+    fields = (
+        "requests_submitted", "requests_completed", "requests_evacuated",
+        "requests_resumed", "frames_emitted", "steps_advanced",
+        "batched_dispatches", "solo_dispatches", "kernel_dispatches",
+        "buckets_retired", "pool_grows", "pool_shrinks",
+    )
+    out = {f: 0 for f in fields}
+    engines = 0
+    for m in list(_LIVE):
+        engines += 1
+        for f in fields:
+            out[f] += getattr(m, f)
+    out["engines"] = engines
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +95,7 @@ class EngineMetrics:
         self._latency_limit = int(history_limit)
         stats = api.cache_stats()
         self._cache_baseline = stats.as_dict()
+        _LIVE.add(self)
 
     # -- recording (engine-internal) ------------------------------------
     def record_step(self, step: StepMetrics) -> None:
@@ -118,19 +145,25 @@ class EngineMetrics:
 
     def step_latency(self) -> dict:
         """Per-fingerprint dispatch latency: key ->
-        {"count", "mean_s", "p50_s", "p99_s"} over the recorded window.
-        One dispatch advances a whole epoch (``exchange_every`` time
-        steps) for every live slot in the bucket."""
+        {"count", "mean_s", "p50_s", "p99_s", "max_s"} over the recorded
+        window.  One dispatch advances a whole epoch (``exchange_every``
+        time steps) for every live slot in the bucket.  Degenerate
+        windows are well-defined: an empty window reports all-zero
+        latencies with ``count: 0`` (instead of vanishing from the
+        snapshot), and a single sample is its own p50/p99/max."""
         out = {}
         for key, times in self.step_seconds.items():
-            if not times:
-                continue
             ordered = sorted(times)
+            if not ordered:
+                out[key] = {"count": 0, "mean_s": 0.0, "p50_s": 0.0,
+                            "p99_s": 0.0, "max_s": 0.0}
+                continue
             out[key] = {
                 "count": len(ordered),
                 "mean_s": sum(ordered) / len(ordered),
                 "p50_s": _quantile(ordered, 0.50),
                 "p99_s": _quantile(ordered, 0.99),
+                "max_s": ordered[-1],
             }
         return out
 

@@ -1,0 +1,314 @@
+"""repro.obs: span tracer, Chrome export, unified registry, drift.
+
+The tracer itself is tested synthetically (hand-built spans, no jax);
+the end-to-end acceptance — a traced 2-rank ``exchange_every=4`` heat
+run whose merged Chrome trace shows one exchange span pair per epoch
+overlapping the interior apply — runs in a subprocess through
+``tests/dist_worker.py obs-trace-2rank`` so the 8-device XLA flag never
+leaks into this process.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import obs
+from repro.obs.trace import LANE_COMM, LANE_EXECUTE, Span, Tracer
+
+WORKER = os.path.join(os.path.dirname(__file__), "dist_worker.py")
+
+
+@pytest.fixture(autouse=True)
+def _clean_tracer():
+    """Every test starts and ends with the singleton disabled + empty."""
+    obs.disable()
+    obs.clear()
+    yield
+    obs.disable()
+    obs.clear()
+
+
+# --------------------------------------------------------------------------
+# tracer core
+# --------------------------------------------------------------------------
+
+
+def test_disabled_tracing_is_a_shared_noop():
+    assert not obs.enabled()
+    h1 = obs.span("work", cat="compute", big="payload")
+    h2 = obs.span("other")
+    # one shared null object — nothing allocated per disabled call site
+    assert h1 is h2
+    with h1:
+        h1.args["ignored"] = True  # writes to a disabled span go nowhere
+    assert obs.spans() == []
+    obs.instant("event")
+    assert obs.end_window(obs.begin_window("w")) is None
+    assert obs.spans() == []
+
+
+def test_span_records_nesting_and_args():
+    obs.enable()
+    with obs.span("outer", cat="compile", phase="a"):
+        with obs.span("inner", cat="compile"):
+            pass
+        with obs.span("inner2", cat="compute"):
+            pass
+    got = obs.spans()
+    assert [s.name for s in got] == ["inner", "inner2", "outer"]
+    by = {s.name: s for s in got}
+    assert by["outer"].depth == 0
+    assert by["inner"].depth == by["inner2"].depth == 1
+    assert by["outer"].args == {"phase": "a"}
+    # children are contained in the parent's window
+    assert by["outer"].ts <= by["inner"].ts
+    assert by["inner"].end <= by["outer"].end + 1e-6
+    assert by["inner"].end <= by["inner2"].ts + by["inner2"].dur + 1e-6
+
+
+def test_traced_decorator_bare_and_named():
+    @obs.traced
+    def f(x):
+        return x + 1
+
+    @obs.traced("custom.name", cat="serve")
+    def g(x):
+        return x * 2
+
+    assert f(1) == 2 and g(2) == 4  # disabled: plain passthrough
+    assert obs.spans() == []
+    obs.enable()
+    assert f(1) == 2 and g(2) == 4
+    names = [s.name for s in obs.spans()]
+    assert any("f" in n for n in names) and "custom.name" in names
+    assert {s.cat for s in obs.spans() if s.name == "custom.name"} == {"serve"}
+
+
+def test_async_windows_live_on_the_comm_lane():
+    obs.enable()
+    tok = obs.begin_window("comm.exchange", size=[1, 4])
+    with obs.span("apply:interior", cat="compute"):
+        pass
+    obs.end_window(tok, rounds=1)
+    comm = [s for s in obs.spans() if s.cat == "comm"]
+    assert len(comm) == 1
+    assert comm[0].tid == LANE_COMM
+    assert comm[0].args == {"size": [1, 4], "rounds": 1}
+    # the window opened before the apply and closed after it: overlap
+    apply = next(s for s in obs.spans() if s.name == "apply:interior")
+    assert apply.tid == LANE_EXECUTE
+    assert comm[0].ts <= apply.ts and apply.end <= comm[0].end + 1e-6
+
+
+def test_ring_buffer_bounds_and_counts_drops():
+    t = Tracer(capacity=4)
+    t.enable()
+    for i in range(7):
+        with t.span(f"s{i}"):
+            pass
+    kept = [s.name for s in t.spans()]
+    assert kept == ["s3", "s4", "s5", "s6"]
+    assert t.dropped == 3
+    assert t.counters()["dropped"] == 3
+    t.clear()
+    assert t.spans() == [] and t.dropped == 0
+
+
+def test_span_dict_roundtrip():
+    s = Span(name="epoch", cat="dispatch", ts=10.0, dur=0.5, rank=1,
+             tid=LANE_EXECUTE, depth=2, args={"k": 4})
+    assert Span.from_dict(s.as_dict()) == s
+
+
+# --------------------------------------------------------------------------
+# export
+# --------------------------------------------------------------------------
+
+
+def _synthetic_spans():
+    """Two ranks, one SPMD span, one comm window overlapping an apply."""
+    return [
+        Span("epoch", "dispatch", ts=1.0, dur=1.0, rank=None,
+             args={"ranks": 2, "k": 4}),
+        Span("comm.exchange", "comm", ts=1.1, dur=0.5, rank=None,
+             tid=LANE_COMM, args={"ranks": 2}),
+        Span("apply:interior", "compute", ts=1.2, dur=0.3, rank=None,
+             args={"ranks": 2}),
+        Span("engine.step", "serve", ts=2.0, dur=0.1, rank=0),
+    ]
+
+
+def test_chrome_export_schema(tmp_path):
+    path = obs.write_chrome(str(tmp_path / "t.json"), _synthetic_spans())
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    xs = [e for e in events if e["ph"] == "X"]
+    # two ranks discovered from args.ranks -> two process-name records
+    assert {e["args"]["name"] for e in meta if e["name"] == "process_name"} \
+        == {"rank 0", "rank 1"}
+    # SPMD spans replicate onto both pids; rank-0 span stays on pid 0
+    epochs = [e for e in xs if e["name"] == "epoch"]
+    assert sorted(e["pid"] for e in epochs) == [0, 1]
+    assert all(e["args"]["spmd"] for e in epochs)
+    steps = [e for e in xs if e["name"] == "engine.step"]
+    assert [e["pid"] for e in steps] == [0]
+    # microseconds, comm lane separated
+    ep = epochs[0]
+    assert ep["ts"] == pytest.approx(1.0 * 1e6) and \
+        ep["dur"] == pytest.approx(1.0 * 1e6)
+    assert {e["tid"] for e in xs if e["cat"] == "comm"} == {LANE_COMM}
+
+
+def test_rank_traces_merge_and_reload(tmp_path):
+    spans = _synthetic_spans()
+    paths = obs.write_rank_traces(str(tmp_path), spans)
+    assert len(paths) == 2
+    merged_path = str(tmp_path / "merged.json")
+    merged = obs.merge_traces(str(tmp_path), out=merged_path)
+    xs = [e for e in merged["traceEvents"] if e["ph"] == "X"]
+    # 3 SPMD spans x 2 ranks + 1 rank-0 span
+    assert len(xs) == 7
+    meta = [e for e in merged["traceEvents"] if e["ph"] == "M"]
+    names = [(e["name"], e["pid"], e["tid"]) for e in meta]
+    assert len(names) == len(set(names)), "merge must dedupe metadata"
+    # a merged chrome file loads back into Span objects (rank = pid)
+    loaded = obs.load_spans(merged_path)
+    assert len(loaded) == 7
+    assert {s.rank for s in loaded} == {0, 1}
+
+
+def test_jsonl_roundtrip(tmp_path):
+    spans = _synthetic_spans()
+    path = obs.write_jsonl(str(tmp_path / "t.jsonl"), spans)
+    loaded = obs.load_spans(path)
+    assert loaded == spans
+
+
+# --------------------------------------------------------------------------
+# unified registry
+# --------------------------------------------------------------------------
+
+
+def test_snapshot_unifies_five_counter_islands():
+    snap = obs.snapshot()
+    for ns in ("compile", "kernel", "serve", "checkpoint", "tune"):
+        assert ns in snap, f"missing namespace {ns}"
+        assert isinstance(snap[ns], dict) and snap[ns], snap[ns]
+    assert {"hits", "misses", "pipeline_runs"} <= set(snap["compile"])
+    assert {"apply_calls", "pallas_calls"} <= set(snap["kernel"])
+    assert "engines" in snap["serve"]
+    assert {"saves", "restores"} <= set(snap["checkpoint"])
+    assert "hits" in snap["tune"]
+    assert snap["trace"]["enabled"] is False
+    flat = obs.snapshot(flat=True)
+    assert "compile.hits" in flat and "checkpoint.saves" in flat
+
+
+def test_snapshot_sees_live_traffic():
+    import numpy as np
+
+    from repro.api import Target, cache_stats, compile as api_compile
+    from repro.frontends.oec_like import ProgramBuilder
+
+    p = ProgramBuilder("obs_snap", (8, 8))
+    u = p.input("u")
+    out = p.output("out")
+    r = p.apply([p.load(u)], lambda b, u: u.at(0, 0) * 2.0)
+    p.store(r, out)
+    prog = p.finish(boundary="zero")
+    before = obs.snapshot()
+    step = api_compile(prog, Target())
+    step(np.zeros((8, 8), np.float32), np.zeros((8, 8), np.float32))
+    after = obs.snapshot()
+    assert after["compile"]["pipeline_runs"] > before["compile"]["pipeline_runs"]
+    total = after["compile"]["hits"] + after["compile"]["misses"]
+    assert total > before["compile"]["hits"] + before["compile"]["misses"]
+
+
+# --------------------------------------------------------------------------
+# drift
+# --------------------------------------------------------------------------
+
+
+class _FixedTerms:
+    """RooflineTerms stand-in with a known modeled step time."""
+
+    def __init__(self, step_s):
+        self._s = step_s
+
+    def step_time(self, k):
+        return self._s
+
+
+def _drift_spans(epoch_dur=0.8, k=4):
+    spans = []
+    for e in range(2):
+        t0 = float(e)
+        spans.append(Span("epoch", "dispatch", ts=t0, dur=epoch_dur,
+                          args={"k": k, "epoch": e}))
+        # exchange window 0.2 wide; interior apply covers half of it
+        spans.append(Span("comm.exchange", "comm", ts=t0 + 0.1, dur=0.2,
+                          tid=LANE_COMM))
+        spans.append(Span("apply:interior", "compute", ts=t0 + 0.2, dur=0.3))
+    return spans
+
+
+def test_drift_report_synthetic():
+    rep = obs.drift_report(spans=_drift_spans(), terms=_FixedTerms(0.1))
+    assert rep.epochs == 2
+    assert rep.exchange_every == 4  # inferred from the epoch span's k tag
+    assert rep.measured_step_s == pytest.approx(0.8 / 4)
+    assert rep.modeled_step_s == pytest.approx(0.1)
+    assert rep.drift_ratio == pytest.approx(2.0)
+    assert rep.error_pct == pytest.approx(100.0)
+    # window [0.1, 0.3], apply covers [0.2, 0.3] -> half hidden
+    assert rep.overlap_windows == 2
+    assert rep.achieved_overlap == pytest.approx(0.5)
+    assert rep.per_phase_s["comm"] == pytest.approx(0.4)
+    text = str(rep)
+    assert "drift ratio" in text and "achieved overlap" in text
+    d = rep.as_dict()
+    assert d["drift_ratio"] == pytest.approx(2.0)
+
+
+def test_drift_report_without_model_or_epochs():
+    rep = obs.drift_report(spans=[])
+    assert rep.epochs == 0 and rep.measured_step_s is None
+    assert rep.drift_ratio is None and rep.achieved_overlap is None
+    rep = obs.drift_report(spans=_drift_spans())  # measured-only
+    assert rep.modeled_step_s is None and rep.drift_ratio is None
+    assert rep.achieved_overlap == pytest.approx(0.5)
+
+
+def test_obs_cli_summarizes_a_trace(tmp_path):
+    path = obs.write_chrome(str(tmp_path / "t.json"), _drift_spans())
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.obs", path, "--modeled-step", "0.1"],
+        capture_output=True, text=True, timeout=120,
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(os.path.dirname(WORKER), "..", "src")},
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "epoch" in proc.stdout and "drift" in proc.stdout
+
+
+# --------------------------------------------------------------------------
+# acceptance: traced 2-rank deep-halo run (subprocess, 8 virtual devices)
+# --------------------------------------------------------------------------
+
+
+def test_traced_two_rank_exchange_windows():
+    proc = subprocess.run(
+        [sys.executable, WORKER, "obs-trace-2rank"],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, (
+        f"obs-trace-2rank failed:\nSTDOUT:\n{proc.stdout}\n"
+        f"STDERR:\n{proc.stderr[-3000:]}"
+    )
+    assert "ok: obs-trace-2rank" in proc.stdout

@@ -273,7 +273,9 @@ def test_keep_last_retention_and_counters(tmp_path):
     for s in range(5):
         ckpt.save(s, {"u": np.full((2, 2), float(s))}, blocking=True)
     assert ckpt.available_steps() == [3, 4]
-    assert ckpt.stats.as_dict() == {"saves": 5, "prunes": 3, "gcs": 0}
+    assert ckpt.stats.as_dict() == {
+        "saves": 5, "prunes": 3, "gcs": 0, "restores": 0,
+    }
 
 
 def test_startup_gc_counts_partials(tmp_path):

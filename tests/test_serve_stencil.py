@@ -338,6 +338,30 @@ def test_step_latency_reports_per_fingerprint_quantiles():
         assert stats["mean_s"] > 0.0
 
 
+def test_step_latency_degenerate_windows():
+    """0- and 1-sample latency windows are well-defined: an empty window
+    reports count=0 with all-zero quantiles (it must not vanish from the
+    snapshot or raise), and a single sample is its own p50/p99/max."""
+    from repro.serve.stencil.metrics import EngineMetrics
+
+    m = EngineMetrics()
+    m.step_seconds["empty/window"] = []
+    m.record_dispatch("one/sample", 0.25)
+    lat = m.step_latency()
+    assert lat["empty/window"] == {
+        "count": 0, "mean_s": 0.0, "p50_s": 0.0, "p99_s": 0.0, "max_s": 0.0,
+    }
+    one = lat["one/sample"]
+    assert one["count"] == 1
+    assert one["p50_s"] == one["p99_s"] == one["max_s"] == one["mean_s"] == 0.25
+    # two samples: max is the larger, p50 interpolates between them
+    m.record_dispatch("one/sample", 0.75)
+    two = m.step_latency()["one/sample"]
+    assert two["max_s"] == 0.75
+    assert two["p50_s"] == pytest.approx(0.5)
+    assert two["p99_s"] <= two["max_s"]
+
+
 def test_queue_depth_reports_per_fingerprint():
     prog = _heat(name="heat_depth")
     eng = StencilEngine(StencilEngineConfig(slots_per_group=1))
